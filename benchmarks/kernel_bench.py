@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks (interpret mode on CPU: correctness-coupled
+relative timings; the queue-depth sweep is the kernel-level COPIFT-vs-v2
+experiment — on real TPU depth>=2 overlaps DMA with the MXU)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention, moe_gemm, queue_matmul, ssm_scan
+from repro.kernels.queue_matmul.ref import matmul_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 512), jnp.float32)
+    w = jax.random.normal(key, (512, 256), jnp.float32)
+    base = _time(lambda a, b: matmul_ref(a, b), x, w)
+    rows.append(("kernel_matmul_xla_ref", base, 1.0))
+    for depth in (1, 2, 4):
+        us = _time(lambda a, b, d=depth: queue_matmul(a, b, depth=d), x, w)
+        rows.append((f"kernel_queue_matmul_depth{depth}", us, us / base))
+
+    q = jax.random.normal(key, (1, 4, 512, 64))
+    k = jax.random.normal(key, (1, 4, 512, 64))
+    v = jax.random.normal(key, (1, 4, 512, 64))
+    us = _time(lambda a, b, c: flash_attention(a, b, c, causal=True), q, k, v)
+    rows.append(("kernel_flash_attention_512", us, 0.0))
+
+    xs = jax.random.normal(key, (1, 256, 128)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 256, 128))) * 0.1
+    A = -jnp.abs(jax.random.normal(key, (128, 16)))
+    Bm = jax.random.normal(key, (1, 256, 16))
+    C = jax.random.normal(key, (1, 256, 16))
+    us = _time(lambda *a: ssm_scan(*a), xs, dt, A, Bm, C)
+    rows.append(("kernel_ssm_scan_256x128", us, 0.0))
+
+    xe = jax.random.normal(key, (4, 128, 256))
+    we = jax.random.normal(key, (4, 256, 128))
+    for depth in (1, 2):
+        us = _time(lambda a, b, d=depth: moe_gemm(a, b, depth=d), xe, we)
+        rows.append((f"kernel_moe_gemm_depth{depth}", us, 0.0))
+    return rows
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

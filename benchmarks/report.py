@@ -1,0 +1,95 @@
+"""Regenerate the EXPERIMENTS.md §Tables block from dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.report   (rewrites everything
+after the '## §Tables' marker in EXPERIMENTS.md)."""
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "artifacts")
+MARKER = "## §Tables"
+
+
+def load(dirname, variant, mesh="pod16x16"):
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(
+            ART, dirname, f"*_{mesh}_*_{variant}.json"))):
+        with open(p) as f:
+            a = json.load(f)
+        cells[(a["arch"], a["shape"])] = a
+    return cells
+
+
+def render() -> str:
+    base = load("dryrun_baseline", "analysis")
+    opt = load("dryrun", "analysis")
+    dep = load("dryrun", "deploy")
+    dep2 = load("dryrun", "deploy", "pod2x16x16")
+
+    L = [MARKER, "", "Regenerate with `python -m benchmarks.report`.", ""]
+    L += ["### Roofline — optimized (current code), analysis variant, 256 chips",
+          "",
+          "| arch | shape | t_compute | t_memory | t_collective | bound | useful | MFU | step vs baseline |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), a in sorted(opt.items()):
+        r = a["roofline"]
+        b = base.get((arch, shape), {}).get("roofline", {})
+        gain = (b.get("step_time", 0) / r["step_time"]) if r["step_time"] else 0
+        L.append(f"| {arch} | {shape} | {r['t_compute']:.2e} | "
+                 f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | "
+                 f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+                 f"{r['mfu']:.4f} | {gain:.1f}× |")
+
+    L += ["", "### Roofline — paper-faithful baseline "
+          "(artifacts/dryrun_baseline)", "",
+          "| arch | shape | t_compute | t_memory | t_collective | bound | MFU |",
+          "|---|---|---|---|---|---|---|"]
+    for (arch, shape), a in sorted(base.items()):
+        r = a["roofline"]
+        L.append(f"| {arch} | {shape} | {r['t_compute']:.2e} | "
+                 f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | "
+                 f"{r['bottleneck']} | {r['mfu']:.4f} |")
+
+    L += ["", "### Dry-run — deployable lowering: compile gate + per-device state",
+          "",
+          "All cells lower + compile on both meshes.  `state` = exact analytic",
+          "per-device persistent bytes (params + optimizer + caches) from the",
+          "real leaf shardings; v5e HBM = 16 GB.  (XLA:CPU `memory_analysis`",
+          "logical-buffer bytes are also recorded in the artifacts but do not",
+          "map 1:1 to per-device TPU HBM.)", "",
+          "| arch | shape | state GB @256 | state GB @512 | collective GB/dev @256 (AR/AG/RS/A2A/CP) |",
+          "|---|---|---|---|---|"]
+    for (arch, shape), a in sorted(dep.items()):
+        g = a.get("analytic_device_gb", {}).get("total_gb", float("nan"))
+        g2 = dep2.get((arch, shape), {}).get(
+            "analytic_device_gb", {}).get("total_gb", float("nan"))
+        c = a["collectives"]
+        cs = "/".join(f"{c.get(k, 0)/1e9:.1f}" for k in
+                      ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        flag = " ⚠" if g > 16 else ""
+        L.append(f"| {arch} | {shape} | {g:.2f}{flag} | {g2:.2f} | {cs} |")
+    L += ["", "⚠ nemotron-4-340b train at 256 chips: fp32 params + Adam of a "
+          "341B model is ~21 GB/chip even fully sharded over all 256 devices "
+          "— the 512-chip mesh brings it under 16 GB (capacity finding; the "
+          "256-chip lowering still partitions and compiles).", ""]
+    return "\n".join(L)
+
+
+def main() -> None:
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    idx = text.find(MARKER)
+    if idx < 0:
+        text = text + "\n" + render()
+    else:
+        text = text[:idx] + render()
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md §Tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

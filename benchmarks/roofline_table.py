@@ -1,0 +1,55 @@
+"""Render the roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*_analysis.json (true loop-unrolled totals for the
+three terms) and *_deploy.json (memory footprint / compile gate)."""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(variant="analysis", mesh="pod16x16"):
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(ART, f"*_{mesh}_*_{variant}.json"))):
+        with open(p) as f:
+            a = json.load(f)
+        cells[(a["arch"], a["shape"])] = a
+    return cells
+
+
+def table(cells):
+    hdr = (f"{'arch':<22} {'shape':<12} {'t_comp':>9} {'t_mem':>9} "
+           f"{'t_coll':>9} {'bound':<10} {'useful':>7} {'mfu':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for (arch, shape), a in sorted(cells.items()):
+        r = a["roofline"]
+        lines.append(
+            f"{arch:<22} {shape:<12} {r['t_compute']:>9.2e} "
+            f"{r['t_memory']:>9.2e} {r['t_collective']:>9.2e} "
+            f"{r['bottleneck']:<10} {r['useful_flops_ratio']:>7.3f} "
+            f"{r['mfu']:>7.4f}")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    for (arch, shape), a in sorted(load().items()):
+        r = a["roofline"]
+        rows.append((f"roofline_{arch}_{shape}_mfu", a["compile_s"] * 1e6,
+                     r["mfu"]))
+    return rows
+
+
+def main():
+    cells = load()
+    if not cells:
+        print("roofline_no_artifacts,0,0")
+        return
+    print(table(cells))
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived:.6f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark entry point — one section per paper table/figure plus the
+framework-level experiments.  Prints ``name,us_per_call,derived`` CSV."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import collective_policy, fig3, kernel_bench, roofline_table
+    sections = [
+        ("fig3 (paper Fig.3a/b/c via the machine model)", fig3),
+        ("kernels (interpret-mode micro-bench)", kernel_bench),
+        ("collective policy (bulk vs ring)", collective_policy),
+        ("roofline (from dry-run artifacts)", roofline_table),
+    ]
+    failed = []
+    for title, mod in sections:
+        print(f"# --- {title} ---")
+        try:
+            mod.main()
+        except Exception as e:
+            failed.append(title)
+            print(f"# SECTION FAILED: {e}")
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmark sections failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

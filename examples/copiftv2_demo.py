@@ -1,0 +1,52 @@
+"""The paper's contribution, end to end:
+
+1. Take a mixed integer/FP kernel (expf, Fig. 1b of the paper), lower it
+   with all three methodologies and simulate on the Snitch machine model —
+   IPC, throughput and energy as in Fig. 3.
+2. Show the same queue idea at the TPU kernel level: queue_matmul with
+   depth 1 (COPIFT-style staging) vs depth 4 (COPIFTv2 multi-buffer).
+
+  PYTHONPATH=src python examples/copiftv2_demo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KERNELS, MachineConfig, TransformConfig, lower,
+                        simulate)
+from repro.core.policy import ExecutionPolicy as P
+from repro.kernels import queue_matmul
+from repro.kernels.queue_matmul.ref import matmul_ref
+
+
+def main():
+    print("== 1. the paper's methodology on the Snitch machine model ==")
+    tc = TransformConfig(n_samples=256)
+    for name in ("expf", "poly_lcg", "dequant_dot"):
+        dfg = KERNELS[name]
+        print(f"\n{name}:")
+        base = None
+        for pol in (P.BASELINE, P.COPIFT, P.COPIFTV2):
+            res = simulate(lower(dfg, pol, tc), MachineConfig())
+            base = base or res
+            print(f"  {pol.value:<9} IPC={res.ipc:5.2f}  "
+                  f"samples/cycle={res.throughput:6.4f} "
+                  f"({res.throughput/base.throughput:4.2f}x)  "
+                  f"samples/J={res.efficiency:8.6f} "
+                  f"({res.efficiency/base.efficiency:4.2f}x)")
+
+    print("\n== 2. the same queue idea as a TPU Pallas kernel ==")
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    ref = matmul_ref(x, w)
+    for depth, label in ((1, "COPIFT-style: stage tile, barrier, compute"),
+                         (4, "COPIFTv2: 4-slot VMEM queue, DMA overlaps MXU")):
+        y = queue_matmul(x, w, depth=depth)
+        err = float(jnp.max(jnp.abs(y - ref)))
+        print(f"  depth={depth}  max|err|={err:.2e}   # {label}")
+    print("\n(depth is the VMEM slot-ring size — the hardware FIFO depth "
+          "of the paper;\n wall-clock overlap shows on real TPU hardware, "
+          "interpret mode checks semantics)")
+
+
+if __name__ == "__main__":
+    main()

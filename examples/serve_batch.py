@@ -1,0 +1,46 @@
+"""Batched serving: continuous batching over a reduced model, several
+concurrent requests of different lengths.
+
+  PYTHONPATH=src python examples/serve_batch.py --arch recurrentgemma-2b
+"""
+import argparse
+import time
+
+import jax
+
+from repro.config import RunConfig
+from repro.configs import ARCHS, get_reduced
+from repro.models import init_model_params
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b",
+                    choices=[a for a in ARCHS if a != "hubert-xlarge"])
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    rc = RunConfig(dtype="float32", param_dtype="float32", remat=False)
+    params = init_model_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, rc, batch_slots=3, max_len=128)
+
+    for i in range(args.requests):
+        prompt = list(range(1 + i, 5 + 2 * i))
+        eng.submit(prompt, max_new=args.max_new)
+
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    n_tok = sum(len(r.generated) for r in done.values())
+    print(f"{cfg.name}: {len(done)} requests, {n_tok} tokens, "
+          f"{n_tok/dt:.1f} tok/s")
+    for rid in sorted(done):
+        r = done[rid]
+        print(f"  req{rid} prompt[:4]={r.prompt[:4]} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

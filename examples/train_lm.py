@@ -1,0 +1,67 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+through the full stack — data prefetch queue, fault-tolerant trainer, async
+checkpointing, straggler monitor.
+
+The default invocation trains a 115M-param phi3-style model; on this CPU
+container use --preset small (~19M) for a quick demonstration, or pass
+--steps/--batch/--seq explicitly.
+
+  PYTHONPATH=src python examples/train_lm.py --preset small --steps 200
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.config import ModelConfig, RunConfig, ShapeConfig
+from repro.models import init_model_params
+from repro.runtime import FaultTolerantTrainer
+from repro.launch.mesh import make_local_mesh
+
+PRESETS = {
+    # ~19M params: quick CPU demo
+    "small": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                  d_ff=1024, vocab=8192, seq=256, batch=8),
+    # ~115M params: the "train ~100M for a few hundred steps" deliverable
+    "100m": dict(n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+                 d_ff=2048, vocab=32768, seq=512, batch=8),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = ModelConfig(name=f"lm-{args.preset}", family="dense",
+                      n_layers=p["n_layers"], d_model=p["d_model"],
+                      n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
+                      d_ff=p["d_ff"], vocab=p["vocab"])
+    print(f"model: {cfg.n_params()/1e6:.1f}M params")
+    rc = RunConfig(dtype="float32", param_dtype="float32", remat=False,
+                   lr=args.lr, warmup_steps=args.steps // 20 + 1,
+                   total_steps=args.steps)
+    shape = ShapeConfig("train", p["seq"], p["batch"], "train")
+    params = init_model_params(jax.random.PRNGKey(0), cfg)
+
+    trainer = FaultTolerantTrainer(cfg, shape, rc, make_local_mesh,
+                                   args.ckpt_dir, ckpt_every=50)
+    t0 = time.time()
+    out = trainer.run(params, num_steps=args.steps)
+    dt = time.time() - t0
+    losses = [l for _, l in out["metrics"]]
+    k = max(len(losses) // 10, 1)
+    tok = p["seq"] * p["batch"] * args.steps
+    print(f"{args.steps} steps / {tok/1e6:.2f}M tokens in {dt:.0f}s")
+    print(f"loss: {sum(losses[:k])/k:.4f} -> {sum(losses[-k:])/k:.4f}")
+    assert sum(losses[-k:]) / k < sum(losses[:k]) / k, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

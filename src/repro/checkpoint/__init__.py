@@ -1,0 +1,3 @@
+from .manager import CheckpointManager, restore, save
+
+__all__ = ["CheckpointManager", "restore", "save"]

@@ -1,0 +1,18 @@
+"""COPIFTv2 core: the paper's methodology as executable transforms + a
+cycle-approximate Snitch/FPSS machine model, plus the ExecutionPolicy enum
+that threads the dual-stream idea through the TPU layers of the framework."""
+from .bench_kernels import KERNELS
+from .dfg import LoopDFG, Node, s
+from .isa import Instr, OpKind, Queue, Unit
+from .machine import DeadlockError, MachineConfig, Program, SimResult, simulate
+from .metrics import (PAPER_CLAIMS, KernelComparison, geomean, run_suite,
+                      summarize)
+from .policy import ExecutionPolicy
+from .transform import TransformConfig, analyze, lower
+
+__all__ = [
+    "KERNELS", "LoopDFG", "Node", "s", "Instr", "OpKind", "Queue", "Unit",
+    "DeadlockError", "MachineConfig", "Program", "SimResult", "simulate",
+    "PAPER_CLAIMS", "KernelComparison", "geomean", "run_suite", "summarize",
+    "ExecutionPolicy", "TransformConfig", "analyze", "lower",
+]

@@ -1,0 +1,155 @@
+"""Abstract ISA for the Snitch + FPSS machine model.
+
+The paper's platform is a Snitch cluster core [Zaruba et al., TC'21]: a
+single-issue in-order integer core ("INT" unit) with a decoupled FP
+coprocessor ("FP" unit, the FPSS) that supports FREP hardware loops and SSR
+streaming registers.  COPIFTv2 adds two blocking FIFO queues (I2F, F2I)
+between the units.
+
+We model instructions abstractly: each OpKind carries the executing unit, a
+result latency (cycles until the destination value is usable), an energy
+weight (relative units — we only ever report *ratios*, see DESIGN.md §3.1),
+and whether it blocks its unit (non-pipelined, e.g. fdiv/fsqrt).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+
+class Unit(enum.Enum):
+    INT = "int"
+    FP = "fp"
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    unit: Unit
+    latency: int
+    energy: float
+    blocking: bool = False
+
+
+class OpKind(enum.Enum):
+    # Integer core
+    IALU = "ialu"          # add/sub/shift/and/or/lui...
+    IMUL = "imul"
+    LW = "lw"              # integer load (TCDM hit)
+    SW = "sw"              # integer store
+    MV = "mv"              # register move; also queue push/pop shim
+    BR = "br"              # branch / loop bookkeeping
+    SYNC = "sync"          # COPIFT batch-semaphore bookkeeping (flag store)
+    # FPSS
+    FLD = "fld"
+    FSD = "fsd"
+    FSD_SSR = "fsd_ssr"    # store through an SSR stream (COPIFT F2I spill)
+    FADD = "fadd"
+    FMUL = "fmul"
+    FMA = "fma"
+    FDIV = "fdiv"
+    FSQRT = "fsqrt"
+    CVT_I2F = "cvt_i2f"    # fcvt.d.w / fmv.d.x : int operand -> FP result
+    CVT_F2I = "cvt_f2i"    # fcvt.w.d / fmv.x.d : FP operand -> int result
+    FMV_PUSH = "fmv_push"  # fmv.x.d used purely to push an FP value to F2I
+
+
+#: Latency / energy table, loosely calibrated to Snitch (GF12, 1 GHz).
+#: Energies are relative units; see DESIGN.md §3.1 for the calibration stance.
+OP_TABLE: dict[OpKind, OpSpec] = {
+    OpKind.IALU:     OpSpec(Unit.INT, 1, 1.0),
+    OpKind.IMUL:     OpSpec(Unit.INT, 3, 1.8),
+    OpKind.LW:       OpSpec(Unit.INT, 3, 4.5),
+    OpKind.SW:       OpSpec(Unit.INT, 1, 4.0),
+    OpKind.MV:       OpSpec(Unit.INT, 1, 0.8),
+    OpKind.BR:       OpSpec(Unit.INT, 1, 0.9),
+    OpKind.SYNC:     OpSpec(Unit.INT, 1, 1.1),
+    OpKind.FLD:      OpSpec(Unit.FP, 3, 5.0),
+    OpKind.FSD:      OpSpec(Unit.FP, 1, 4.5),
+    OpKind.FSD_SSR:  OpSpec(Unit.FP, 1, 4.2),
+    OpKind.FADD:     OpSpec(Unit.FP, 3, 2.2),
+    OpKind.FMUL:     OpSpec(Unit.FP, 3, 2.4),
+    OpKind.FMA:      OpSpec(Unit.FP, 4, 3.4),
+    OpKind.FDIV:     OpSpec(Unit.FP, 11, 7.0, blocking=True),
+    OpKind.FSQRT:    OpSpec(Unit.FP, 13, 7.5, blocking=True),
+    OpKind.CVT_I2F:  OpSpec(Unit.FP, 2, 1.6),
+    OpKind.CVT_F2I:  OpSpec(Unit.FP, 2, 1.6),
+    OpKind.FMV_PUSH: OpSpec(Unit.FP, 1, 0.9),
+}
+
+#: Kinds executed on the FPSS whose *destination* is integer-homed.
+INT_DST_FP_KINDS = frozenset({OpKind.CVT_F2I, OpKind.FMV_PUSH})
+#: Kinds executed on the FPSS.
+FP_KINDS = frozenset(k for k, s in OP_TABLE.items() if s.unit is Unit.FP)
+
+# --- Energy model knobs (relative units) -----------------------------------
+#: extra energy for a queue push or pop (lightweight FIFO access)
+E_QUEUE_ACCESS = 0.4
+#: extra energy when a value arrives through an SSR memory stream (COPIFT
+#: spill readback): an SRAM read the hardware performs on the FPSS's behalf.
+E_SSR_STREAM = 3.8
+#: fetch/decode overhead for an instruction issued by the integer core
+E_FETCH_INT = 0.6
+#: re-issue overhead for an instruction replayed from the FREP loop buffer
+E_FETCH_FREP = 0.2
+#: background (clock tree, icache, idle datapath, leakage) energy per cycle
+#: for the core pair.  Dominant for a tiny in-order core at 1 GHz; calibrated
+#: so the published COPIFT/COPIFTv2 energy-efficiency ratios are reproduced
+#: (DESIGN.md §3.1 — we report energy *ratios* only).
+E_STATIC_PER_CYCLE = 22.0
+
+
+class Queue(enum.Enum):
+    I2F = "i2f"
+    F2I = "f2i"
+
+
+@dataclass(frozen=True)
+class Instr:
+    """One concrete instruction instance in a lowered stream program.
+
+    ``srcs`` holds operands *in semantic order*: each element is either an
+    SSA value name ("t@3" = value t of sample 3) or a :class:`Queue`, which
+    means "pop the head of that queue as this operand" (the x31 / integer-rs
+    semantics of the EnCopiftQueues CSR).  ``pushes`` enqueues the computed
+    result; ``push_val`` records the semantic value name pushed, used to
+    verify FIFO order correctness.  ``fn`` (optional) gives concrete
+    semantics so the simulator doubles as a functional interpreter for
+    transform-correctness checks.
+    """
+    uid: int
+    kind: OpKind
+    label: str
+    srcs: Tuple[object, ...] = ()
+    dst: Optional[str] = None
+    pushes: Tuple[Queue, ...] = ()
+    push_val: Optional[str] = None
+    expects: Tuple[str, ...] = ()         # value names expected by pops, in order
+    sample: int = -1                      # -1 => overhead instruction
+    fn: Optional[Callable[..., Any]] = None
+    extra_energy: float = 0.0             # e.g. SSR stream read on behalf
+
+    @property
+    def spec(self) -> OpSpec:
+        return OP_TABLE[self.kind]
+
+    @property
+    def unit(self) -> Unit:
+        return self.spec.unit
+
+    @property
+    def pops(self) -> Tuple[Queue, ...]:
+        return tuple(s for s in self.srcs if isinstance(s, Queue))
+
+    @property
+    def reg_srcs(self) -> Tuple[str, ...]:
+        return tuple(s for s in self.srcs if isinstance(s, str))
+
+    def energy(self, *, frep: bool) -> float:
+        e = self.spec.energy + self.extra_energy
+        e += E_QUEUE_ACCESS * (len(self.pops) + len(self.pushes))
+        if self.unit is Unit.INT or not frep:
+            e += E_FETCH_INT
+        else:
+            e += E_FETCH_FREP
+        return e

@@ -1,0 +1,213 @@
+"""Cycle-approximate model of Snitch + FPSS + COPIFTv2 queues.
+
+Two in-order issue units (the integer core and the FPSS), each issuing at
+most one instruction per cycle.  In ``single`` mode (the Snitch baseline) a
+single shared issue port models the integer core fetching *all* instructions
+and offloading FP ones to the FPSS; in ``dual`` mode (COPIFT / COPIFTv2) the
+FPSS replays its FREP loop buffer independently, so both units issue
+concurrently — IPC is bounded by 2.
+
+Queues have finite depth with blocking push/pop semantics: a pop stalls the
+consuming unit until the head entry is visible; a push stalls the producer
+while the queue is full.  Stalls, overlap and IPC *emerge* from the model;
+nothing is hard-coded per policy.
+
+The simulator doubles as a functional interpreter: when instructions carry
+``fn``, values flow through registers, queues and memory channels, letting
+tests assert that every transform preserves the kernel's semantics.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from .isa import E_STATIC_PER_CYCLE, Instr, Queue, Unit
+from .policy import ExecutionPolicy
+
+
+@dataclass
+class MachineConfig:
+    queue_depth: int = 4
+    queue_latency: int = 1          # cycles from producer completion to visibility
+    evaluate: bool = True           # run the functional interpreter too
+    deadlock_limit: int = 20_000    # cycles without progress => deadlock
+
+
+@dataclass
+class Program:
+    name: str
+    policy: ExecutionPolicy
+    mode: str                        # "single" | "dual"
+    streams: Dict[Unit, List[Instr]]
+    n_samples: int
+    init_env: Dict[str, Any] = field(default_factory=dict)
+    output_values: List[str] = field(default_factory=list)  # SSA ids
+    frep: bool = False               # FP stream replayed from the loop buffer
+
+    def total_instrs(self) -> int:
+        return sum(len(v) for v in self.streams.values())
+
+
+@dataclass
+class SimResult:
+    name: str
+    policy: ExecutionPolicy
+    cycles: int
+    n_samples: int
+    instrs: Dict[str, int]
+    energy: float
+    env: Dict[str, Any]
+    push_seq: Dict[Queue, List[str]]
+    pop_seq: Dict[Queue, List[str]]
+    max_queue_occupancy: Dict[Queue, int]
+    fifo_violations: List[Tuple[str, str, str, str]] = field(default_factory=list)
+
+    @property
+    def total_instrs(self) -> int:
+        return sum(self.instrs.values())
+
+    @property
+    def ipc(self) -> float:
+        return self.total_instrs / self.cycles
+
+    @property
+    def throughput(self) -> float:          # samples / cycle
+        return self.n_samples / self.cycles
+
+    @property
+    def power(self) -> float:               # energy / cycle (relative units)
+        return self.energy / self.cycles
+
+    @property
+    def efficiency(self) -> float:          # samples / energy
+        return self.n_samples / self.energy
+
+    def outputs(self, output_values: List[str]) -> Dict[str, Any]:
+        return {v: self.env.get(v) for v in output_values}
+
+
+class DeadlockError(RuntimeError):
+    pass
+
+
+def simulate(prog: Program, cfg: Optional[MachineConfig] = None) -> SimResult:
+    cfg = cfg or MachineConfig()
+    ready: Dict[str, int] = {k: 0 for k in prog.init_env}
+    env: Dict[str, Any] = dict(prog.init_env)
+
+    queues: Dict[Queue, deque] = {q: deque() for q in Queue}
+    occupancy: Dict[Queue, int] = {q: 0 for q in Queue}       # incl. in-flight
+    max_occ: Dict[Queue, int] = {q: 0 for q in Queue}
+    push_seq: Dict[Queue, List[str]] = {q: [] for q in Queue}
+    pop_seq: Dict[Queue, List[str]] = {q: [] for q in Queue}
+    fifo_violations: List[Tuple[str, str, str, str]] = []
+
+    if prog.mode == "single":
+        # the lowering merges everything into one stream (the integer core
+        # fetches all instructions, offloading FP ones to the FPSS)
+        assert len(prog.streams) == 1, "single mode expects one merged stream"
+        order: List[Tuple[Unit, List[Instr]]] = list(prog.streams.items())
+    else:
+        # INT first: gives the integer core priority on shared resources.
+        order = [(u, prog.streams[u]) for u in (Unit.INT, Unit.FP) if u in prog.streams]
+
+    pcs = {u: 0 for u, _ in order}
+    unit_busy = {Unit.INT: 0, Unit.FP: 0}
+    instr_count = {"int": 0, "fp": 0}
+    energy = 0.0
+    cycle = 0
+    last_progress = 0
+    finish = 0
+
+    def can_issue(ins: Instr, now: int) -> bool:
+        if unit_busy[ins.unit] > now:
+            return False
+        need: Dict[Queue, int] = {}
+        for src in ins.srcs:
+            if isinstance(src, Queue):
+                k = need.get(src, 0)
+                q = queues[src]
+                if len(q) <= k or q[k][0] > now:
+                    return False
+                need[src] = k + 1
+            else:
+                t = ready.get(src)
+                if t is None or t > now:
+                    return False
+        room: Dict[Queue, int] = {}
+        for q in ins.pushes:
+            room[q] = room.get(q, 0) + 1
+            if occupancy[q] + room[q] > cfg.queue_depth:
+                return False
+        return True
+
+    def do_issue(ins: Instr, now: int) -> int:
+        nonlocal energy
+        t_done = now + ins.spec.latency
+        opvals = []
+        n_pop = 0
+        for src in ins.srcs:
+            if isinstance(src, Queue):
+                _, vname, val = queues[src].popleft()
+                occupancy[src] -= 1
+                pop_seq[src].append(vname)
+                if ins.expects and ins.expects[n_pop] != vname:
+                    fifo_violations.append(
+                        (ins.label, src.value, ins.expects[n_pop], vname))
+                n_pop += 1
+                opvals.append(val)
+            else:
+                opvals.append(env.get(src))
+        result = None
+        if cfg.evaluate and ins.fn is not None:
+            result = ins.fn(*opvals)
+        if ins.dst is not None:
+            ready[ins.dst] = t_done
+            env[ins.dst] = result
+        for q in ins.pushes:
+            queues[q].append((t_done + cfg.queue_latency, ins.push_val or ins.label, result))
+            occupancy[q] += 1
+            max_occ[q] = max(max_occ[q], occupancy[q])
+            push_seq[q].append(ins.push_val or ins.label)
+        if ins.spec.blocking:
+            unit_busy[ins.unit] = t_done
+        energy += ins.energy(frep=prog.frep and ins.unit is Unit.FP)
+        instr_count[ins.unit.value] += 1
+        return t_done
+
+    while any(pcs[u] < len(lst) for u, lst in order):
+        issued = False
+        for u, lst in order:
+            pc = pcs[u]
+            if pc >= len(lst):
+                continue
+            ins = lst[pc]
+            if can_issue(ins, cycle):
+                t_done = do_issue(ins, cycle)
+                finish = max(finish, t_done)
+                pcs[u] = pc + 1
+                issued = True
+        if issued:
+            last_progress = cycle
+        if cycle - last_progress > cfg.deadlock_limit:
+            stuck = {u.value: (pcs[u], len(lst), str(lst[pcs[u]]) if pcs[u] < len(lst) else "-")
+                     for u, lst in order}
+            raise DeadlockError(f"{prog.name}/{prog.policy.value}: no progress; {stuck}")
+        cycle += 1
+
+    cycles = max(finish, cycle)
+    energy += E_STATIC_PER_CYCLE * cycles
+    return SimResult(
+        name=prog.name,
+        policy=prog.policy,
+        cycles=cycles,
+        n_samples=prog.n_samples,
+        instrs=instr_count,
+        energy=energy,
+        env=env,
+        push_seq=push_seq,
+        pop_seq=pop_seq,
+        max_queue_occupancy=max_occ,
+        fifo_violations=fifo_violations,
+    )

@@ -1,0 +1,29 @@
+"""Execution policies — the paper's methodology ladder, framework-wide.
+
+BASELINE  — original sequential code on the single-issue core (Snitch [6]).
+COPIFT    — DAC'25 methodology [1]: DFG partition + batch + software pipeline
+            + double buffering; inter-thread communication spilled to memory;
+            batch-granular semaphore synchronization.
+COPIFTV2  — this paper: DFG partition + schedule; communication and
+            synchronization through blocking hardware FIFO queues (I2F/F2I);
+            no loop transformations.
+
+The same enum is threaded through the TPU layers (see DESIGN.md §4):
+kernels/queue_matmul (bulk staging vs multi-buffered DMA queue) and
+distributed/collective_matmul (all-gather-then-compute vs ppermute ring).
+"""
+from __future__ import annotations
+
+import enum
+
+
+class ExecutionPolicy(enum.Enum):
+    BASELINE = "baseline"
+    COPIFT = "copift"
+    COPIFTV2 = "copiftv2"
+
+    @classmethod
+    def parse(cls, s: "str | ExecutionPolicy") -> "ExecutionPolicy":
+        if isinstance(s, ExecutionPolicy):
+            return s
+        return cls(s.lower())

@@ -1,0 +1,3 @@
+from .pipeline import PrefetchLoader, SyntheticLMStream
+
+__all__ = ["PrefetchLoader", "SyntheticLMStream"]

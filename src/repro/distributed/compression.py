@@ -1,0 +1,38 @@
+"""Gradient compression: int8 quantization with stochastic rounding.
+
+At 1000+ nodes the cross-pod (DCN) gradient all-reduce dominates; int8
+halves-to-quarters the payload.  We implement the wire codec exactly
+(per-tensor absmax scale, stochastic rounding so the quantizer is unbiased:
+E[deq(q(g))] = g); under pjit the all-reduce itself is XLA's, so the codec is
+applied around the psum — numerically faithful to a compressed wire."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def quantize_int8(key: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    x = g / scale
+    lo = jnp.floor(x)
+    frac = x - lo
+    up = jax.random.uniform(key, g.shape) < frac
+    q = (lo + up.astype(lo.dtype)).clip(-127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(key: jax.Array, grads: Pytree) -> Pytree:
+    """Round-trip every gradient leaf through the int8 wire format."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = [dequantize_int8(*quantize_int8(k, g)).astype(g.dtype)
+           for k, g in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,158 @@
+"""Logical-axis -> mesh-axis resolution (DP / TP / FSDP / EP / SP).
+
+Every parameter leaf carries logical axis names (see models.layers.ParamSpec);
+this module greedily assigns mesh axes by priority with divisibility checks,
+so e.g. granite-moe's 40 experts (not divisible by model=16) automatically
+fall back to sharding the expert hidden dim instead — no per-arch special
+cases (DESIGN.md §6)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import ModelConfig, RunConfig, ShapeConfig
+from ..models.layers import logical_axes_tree
+from ..models.model import param_specs
+
+Pytree = Any
+
+#: logical axis -> (priority, mesh-axis candidates).  Lower priority wins the
+#: mesh axis when several dims of one leaf could take it.
+RULES: Dict[str, Tuple[int, Tuple[str, ...]]] = {
+    "vocab": (0, ("model",)),
+    "heads": (0, ("model",)),
+    "kv_heads": (0, ("model",)),
+    "experts": (0, ("model",)),
+    "inner": (0, ("model",)),
+    "inner2": (0, ("model",)),
+    "ff": (1, ("model",)),
+    "expert_ff": (1, ("model",)),
+    "lora": (2, ("model",)),
+    "embed": (5, ("data",)),        # ZeRO-3/FSDP, only when rc.fsdp
+}
+
+
+def _leaf_pspec(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                mesh: Mesh, fsdp: bool) -> P:
+    taken: set = set()
+    assign: list = [None] * len(shape)
+    order = sorted(range(len(shape)),
+                   key=lambda i: RULES.get(axes[i], (99, ()))[0])
+    for i in order:
+        name = axes[i]
+        if name is None or name not in RULES:
+            continue
+        if name == "embed" and not fsdp:
+            continue
+        for cand in RULES[name][1]:
+            if cand in taken or cand not in mesh.axis_names:
+                continue
+            if shape[i] % mesh.shape[cand] == 0 and shape[i] >= mesh.shape[cand]:
+                assign[i] = cand
+                taken.add(cand)
+                break
+    while assign and assign[-1] is None:
+        assign.pop()
+    return P(*assign)
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, rc: RunConfig) -> Pytree:
+    specs = param_specs(cfg)
+    axes_tree = logical_axes_tree(specs)
+    from ..models.layers import ParamSpec
+
+    def leaf(spec, axes):
+        return _leaf_pspec(spec.shape, axes, mesh, rc.fsdp)
+
+    return jax.tree_util.tree_map(
+        leaf, specs, axes_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _batch_axes(mesh: Mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    """Shard the batch over ('pod','data') when divisible, else 'data',
+    else replicate (e.g. long_500k's batch of 1)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if axes and batch % size == 0 and batch >= size:
+        return tuple(axes)
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0 \
+            and batch >= mesh.shape["data"]:
+        return ("data",)
+    return None
+
+
+def _model_axis(mesh: Mesh, dim: int) -> Optional[str]:
+    if "model" in mesh.axis_names and dim % mesh.shape["model"] == 0 \
+            and dim >= mesh.shape["model"]:
+        return "model"
+    return None
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Pytree:
+    """PartitionSpecs matching models.model.input_specs structure."""
+    b = _batch_axes(mesh, shape.global_batch)
+    base: Dict[str, Any] = {}
+    if shape.mode == "decode":
+        base["tokens"] = P(b)
+        base["cache"] = cache_pspecs(cfg, shape, mesh)
+        return base
+    if cfg.frontend == "audio":
+        base["frames"] = P(b, None, None)
+    else:
+        base["tokens"] = P(b, None)
+        if cfg.frontend == "vision":
+            base["patches"] = P(b, None, None)
+    if shape.mode == "train":
+        base["labels"] = P(b, None)
+    return base
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Pytree:
+    from ..models.ssm import ssm_dims
+    b = _batch_axes(mesh, shape.global_batch)
+    out: Dict[str, Any] = {"len": P()}
+    if cfg.family == "ssm":
+        d_in, _, _ = ssm_dims(cfg)
+        out["ssm"] = P(None, b, _model_axis(mesh, d_in), None)
+        out["conv"] = P(None, b, None, _model_axis(mesh, d_in))
+        return out
+    if cfg.family == "hybrid":
+        w = cfg.rglru.lru_width or cfg.d_model
+        out["h"] = P(None, b, _model_axis(mesh, w))
+        out["conv"] = P(None, b, None, _model_axis(mesh, w))
+        out["k"] = _kv_cache_spec(cfg, mesh, b, cfg.rglru.window)
+        out["v"] = _kv_cache_spec(cfg, mesh, b, cfg.rglru.window)
+        return out
+    if cfg.mla:
+        # latent cache: shard the sequence dim over 'model' (flash-decode:
+        # GSPMD turns the softmax/contraction over the sharded axis into
+        # small psums — storage divides TP-ways without gathering)
+        t_ax = _model_axis(mesh, shape.seq_len)
+        out["latent"] = P(None, b, t_ax, None)
+        out["rope"] = P(None, b, t_ax, None)
+        return out
+    out["k"] = _kv_cache_spec(cfg, mesh, b, shape.seq_len)
+    out["v"] = _kv_cache_spec(cfg, mesh, b, shape.seq_len)
+    return out
+
+
+def _kv_cache_spec(cfg: ModelConfig, mesh: Mesh, b, seq_len: int) -> P:
+    """(L, B, Hkv, T, hd) cache: shard heads over 'model' when divisible,
+    else shard the sequence dim (flash-decode semantics via GSPMD psums) —
+    the capacity fix for kv_heads < TP (pixtral 8, nemotron 8, glm4 2)."""
+    h_ax = _model_axis(mesh, cfg.n_kv_heads)
+    if h_ax is not None:
+        return P(None, b, h_ax, None, None)
+    return P(None, b, None, _model_axis(mesh, seq_len), None)
+
+
+def logits_pspec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> P:
+    b = _batch_axes(mesh, shape.global_batch)
+    v = _model_axis(mesh, cfg.vocab)
+    if shape.mode == "decode":
+        return P(b, v)
+    return P(b, None, v)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as <name>/{kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jitted wrapper), ref.py (pure-jnp oracle)} and is validated in
+interpret mode on CPU (tests/test_kernels.py sweeps shapes and dtypes)."""
+from .flash_attention.ops import flash_attention
+from .moe_gemm.ops import moe_gemm
+from .queue_matmul.ops import queue_matmul
+from .rglru_scan.ops import rglru_scan
+from .ssm_scan.ops import ssm_scan
+
+__all__ = ["flash_attention", "moe_gemm", "queue_matmul", "rglru_scan",
+           "ssm_scan"]

@@ -1,0 +1,23 @@
+"""Oracle: naive attention with explicit masks (small shapes only)."""
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q/k/v: (BH, S, D) -> (BH, S, D)."""
+    S = q.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    i, j = jnp.arange(S)[:, None], jnp.arange(S)[None]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(v.dtype)

@@ -1,0 +1,81 @@
+"""Grouped expert GEMM with the queue-pipelined DMA scheme.
+
+The MoE hot loop is the framework's closest structural analogue to the
+paper's I2F dependency: the *integer stream* (routing: top-k, counts,
+capacity slots — see models.moe) produces the dispatch layout that this
+kernel's address generator consumes, tile by tile, through the same
+``depth``-slot VMEM ring as queue_matmul.  Expert weight tiles stream
+HBM→VMEM ahead of the MXU (depth≥2 = COPIFTv2; depth=1 = staged/COPIFT)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_hbm, w_hbm, o_ref, xs, ws, acc, sx, sw, *,
+            bc: int, bf: int, bk: int, nk: int, depth: int):
+    e = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    def start(t, slot):
+        pltpu.make_async_copy(
+            x_hbm.at[e, pl.ds(i * bc, bc), pl.ds(t * bk, bk)],
+            xs.at[slot], sx.at[slot]).start()
+        pltpu.make_async_copy(
+            w_hbm.at[e, pl.ds(t * bk, bk), pl.ds(j * bf, bf)],
+            ws.at[slot], sw.at[slot]).start()
+
+    for d in range(min(depth, nk)):
+        start(d, d)
+
+    acc[...] = jnp.zeros_like(acc)
+
+    def body(t, _):
+        slot = t % depth
+        pltpu.make_async_copy(
+            x_hbm.at[e, pl.ds(i * bc, bc), pl.ds(t * bk, bk)],
+            xs.at[slot], sx.at[slot]).wait()
+        pltpu.make_async_copy(
+            w_hbm.at[e, pl.ds(t * bk, bk), pl.ds(j * bf, bf)],
+            ws.at[slot], sw.at[slot]).wait()
+        acc[...] += jax.lax.dot_general(
+            xs[slot], ws[slot], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(t + depth < nk)
+        def _():
+            start(t + depth, slot)
+        return ()
+
+    jax.lax.fori_loop(0, nk, body, ())
+    o_ref[0] = acc[...].astype(o_ref.dtype)
+
+
+def moe_gemm_kernel(x, w, *, bc: int, bf: int, bk: int, depth: int,
+                    interpret: bool) -> jax.Array:
+    E, C, d = x.shape
+    f = w.shape[2]
+    grid = (E, C // bc, f // bf)
+    kern = functools.partial(_kernel, bc=bc, bf=bf, bk=bk, nk=d // bk,
+                             depth=depth)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((depth, bc, bk), x.dtype),
+            pltpu.VMEM((depth, bk, bf), w.dtype),
+            pltpu.VMEM((bc, bf), jnp.float32),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+        interpret=interpret,
+    )(x, w)

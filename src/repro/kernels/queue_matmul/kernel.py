@@ -1,0 +1,92 @@
+"""queue_matmul — COPIFTv2's queue mechanism as a TPU matmul kernel.
+
+Mapping (DESIGN.md §4): the scalar core issuing async HBM→VMEM copies is the
+paper's *integer thread* (pure address generation); the MXU loop consuming
+arrived tiles is the *FP thread*.  The two are coupled by a ``depth``-slot
+VMEM ring with DMA-semaphore handshakes — exactly the blocking FIFO
+semantics of the I2F queue:
+
+ * ``depth=1``  — COPIFT analogue: stage a tile, barrier (sem wait), compute,
+   repeat: communication and compute fully serialized.
+ * ``depth>=2`` — COPIFTv2 analogue: copies for tile j+1..j+depth-1 are in
+   flight while tile j multiplies; the semaphore wait *is* the queue pop.
+
+Operands live in ANY (HBM) memory space; the kernel owns its VMEM explicitly
+(slots + fp32 accumulator), with MXU-aligned (128-multiple) tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_hbm, w_hbm, o_ref, xs, ws, acc, sx, sw, *,
+            bm: int, bn: int, bk: int, nk: int, depth: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    def start(t, slot):
+        # integer-thread work: compute tile addresses, push the copy
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * bm, bm), pl.ds(t * bk, bk)],
+            xs.at[slot], sx.at[slot]).start()
+        pltpu.make_async_copy(
+            w_hbm.at[pl.ds(t * bk, bk), pl.ds(j * bn, bn)],
+            ws.at[slot], sw.at[slot]).start()
+
+    # prologue: fill the queue
+    for d in range(min(depth, nk)):
+        start(d, d)
+
+    acc[...] = jnp.zeros_like(acc)
+
+    def body(t, _):
+        slot = t % depth
+        # FP-thread pop: blocking wait on the slot's semaphores
+        pltpu.make_async_copy(
+            x_hbm.at[pl.ds(i * bm, bm), pl.ds(t * bk, bk)],
+            xs.at[slot], sx.at[slot]).wait()
+        pltpu.make_async_copy(
+            w_hbm.at[pl.ds(t * bk, bk), pl.ds(j * bn, bn)],
+            ws.at[slot], sw.at[slot]).wait()
+        acc[...] += jax.lax.dot_general(
+            xs[slot], ws[slot], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        # integer thread refills the slot with tile t+depth
+        @pl.when(t + depth < nk)
+        def _():
+            start(t + depth, slot)
+        return ()
+
+    jax.lax.fori_loop(0, nk, body, (), unroll=False)
+    o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def queue_matmul_kernel(x: jax.Array, w: jax.Array, *, bm: int, bn: int,
+                        bk: int, depth: int, interpret: bool,
+                        out_dtype) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    nk = k // bk
+    grid = (m // bm, n // bn)
+    kern = functools.partial(_kernel, bm=bm, bn=bn, bk=bk, nk=nk, depth=depth)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((depth, bm, bk), x.dtype),
+            pltpu.VMEM((depth, bk, bn), w.dtype),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+        interpret=interpret,
+    )(x, w)

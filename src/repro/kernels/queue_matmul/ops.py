@@ -1,0 +1,43 @@
+"""Jitted public wrapper: padding to MXU-aligned tiles + policy plumbing."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.policy import ExecutionPolicy
+from .kernel import queue_matmul_kernel
+from .ref import matmul_ref
+
+
+def _pad_to(a: jax.Array, mults: Tuple[int, int]) -> jax.Array:
+    pads = [(-a.shape[i]) % mults[i] for i in range(2)]
+    if any(pads):
+        a = jnp.pad(a, ((0, pads[0]), (0, pads[1])))
+    return a
+
+
+@partial(jax.jit, static_argnames=("block", "depth", "interpret", "policy"))
+def queue_matmul(x: jax.Array, w: jax.Array, *,
+                 block: Tuple[int, int, int] = (128, 128, 128),
+                 depth: int = 2,
+                 policy: Optional[ExecutionPolicy] = None,
+                 interpret: bool = True) -> jax.Array:
+    """y = x @ w through the queue-pipelined kernel.
+
+    ``policy`` overrides ``depth``: BASELINE falls back to the XLA matmul,
+    COPIFT forces depth=1 (batch-synchronized staging), COPIFTV2 keeps the
+    requested multi-buffer depth."""
+    if policy is ExecutionPolicy.BASELINE:
+        return matmul_ref(x, w).astype(x.dtype)
+    if policy is ExecutionPolicy.COPIFT:
+        depth = 1
+    m0, n0 = x.shape[0], w.shape[1]
+    bm, bn, bk = block
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    out = queue_matmul_kernel(xp, wp, bm=bm, bn=bn, bk=bk, depth=depth,
+                              interpret=interpret, out_dtype=x.dtype)
+    return out[:m0, :n0]

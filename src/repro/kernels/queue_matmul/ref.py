@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the queue matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,17 @@
+"""Oracle: sequential RG-LRU gated recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, bx):
+    """a/bx: (B, T, w) -> h sequence (B, T, w) fp32.
+    h_t = a_t * h_{t-1} + bx_t"""
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+    B, T, w = a.shape
+    h0 = jnp.zeros((B, w), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.astype(jnp.float32).transpose(1, 0, 2),
+                                    bx.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,24 @@
+"""Oracle: sequential selective-scan recurrence in pure jnp."""
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, A, Bm, C):
+    """x/dt: (B,T,d); A: (d,N); Bm/C: (B,T,N) -> y: (B,T,d) fp32.
+    h_t = exp(dt_t ⊙ A) * h_{t-1} + (dt_t ⊙ x_t) B_t ;  y_t = h_t · C_t"""
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A.astype(jnp.float32))
+    dBx = (dt * x).astype(jnp.float32)[..., None] * \
+        Bm.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, inp):
+        da, dbx, c = inp
+        h = da * h + dbx
+        return h, jnp.einsum("bdn,bn->bd", h, c)
+
+    B, T, d = x.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((B, d, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+                          C.astype(jnp.float32).transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,78 @@
+"""Training launcher: end-to-end driver over the fault-tolerant runtime.
+
+On real hardware this runs under the production mesh; in this container it
+trains reduced/custom-width configs on the host devices.  Examples:
+
+  PYTHONPATH=src python -m repro.launch.train --arch phi3-mini-3.8b \\
+      --reduced --steps 50 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --reduced \\
+      --steps 30 --policy copift
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..config import RunConfig, ShapeConfig
+from ..configs import ARCHS, get_config, get_reduced
+from ..models import init_model_params
+from ..runtime import FaultTolerantTrainer
+from .mesh import make_local_mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Train an assigned architecture")
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--width", type=int, default=0,
+                    help="override d_model (scales a custom mid-size model)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--policy", default="copiftv2")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.width:
+        cfg = dataclasses.replace(cfg, d_model=args.width)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+    from ..core.policy import ExecutionPolicy
+    rc = RunConfig(policy=ExecutionPolicy.parse(args.policy),
+                   dtype="float32", param_dtype="float32", remat=False,
+                   lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                   total_steps=args.steps, microbatch=args.microbatch,
+                   seed=args.seed)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    n = cfg.n_params()
+    print(f"arch={cfg.name} params={n/1e6:.1f}M layers={cfg.n_layers} "
+          f"d_model={cfg.d_model} batch={args.batch} seq={args.seq}")
+    params = init_model_params(jax.random.PRNGKey(args.seed), cfg)
+
+    trainer = FaultTolerantTrainer(cfg, shape, rc, make_local_mesh,
+                                   args.ckpt_dir, ckpt_every=args.ckpt_every)
+    t0 = time.time()
+    out = trainer.run(params, num_steps=args.steps)
+    dt = time.time() - t0
+    losses = out["metrics"]
+    print(f"finished {out['step']} steps in {dt:.1f}s "
+          f"({dt/max(len(losses),1):.2f}s/step)")
+    k = max(len(losses) // 10, 1)
+    first = sum(l for _, l in losses[:k]) / k
+    last = sum(l for _, l in losses[-k:]) / k
+    print(f"loss: first~{first:.4f} -> last~{last:.4f}")
+
+
+if __name__ == "__main__":
+    main()

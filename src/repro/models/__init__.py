@@ -1,0 +1,5 @@
+from .model import (cache_spec, decode_step, forward, init_cache,
+                    init_model_params, input_specs, param_shapes, param_specs)
+
+__all__ = ["cache_spec", "decode_step", "forward", "init_cache",
+           "init_model_params", "input_specs", "param_shapes", "param_specs"]

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts FFN with top-k routing (granite-moe / olmoe).
+
+The routing pipeline is the framework's clearest COPIFTv2 analogue: the
+*integer stream* (top-k selection, expert counts, dispatch indices) feeds the
+*FP stream* (expert GEMMs) — see ``repro.kernels.moe_gemm`` for the
+queue-coupled kernel.  This module is the dense einsum reference: dispatch
+via one-hot combine matrices, numerically exact and shardable (experts over
+the 'model' mesh axis when divisible; see distributed.sharding)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from .layers import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, e = cfg.d_model, cfg.moe
+    specs = {
+        "router": ParamSpec((d, e.num_experts), ("embed", "experts")),
+        "wi": ParamSpec((e.num_experts, d, e.d_ff_expert),
+                        ("experts", "embed", "expert_ff")),
+        "wo": ParamSpec((e.num_experts, e.d_ff_expert, d),
+                        ("experts", "expert_ff", "embed")),
+    }
+    if cfg.ffn_act == "swiglu":
+        specs["wg"] = ParamSpec((e.num_experts, d, e.d_ff_expert),
+                                ("experts", "embed", "expert_ff"))
+    return specs
+
+
+def router_probs(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routing.  x: (B, S, d) -> (weights (B,S,k), idx (B,S,k))."""
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    w, idx = jax.lax.top_k(logits, cfg.moe.top_k)
+    w = jax.nn.softmax(w, axis=-1)
+    return w, idx
+
+
+def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Dense-dispatch MoE: one-hot combine (exact, EP-shardable reference)."""
+    e = cfg.moe
+    B, S, d = x.shape
+    w, idx = router_probs(p, x, cfg)
+    # combine[b,s,E] = sum_k w[b,s,k] * (idx[b,s,k] == E)
+    combine = jnp.sum(
+        jax.nn.one_hot(idx, e.num_experts, dtype=x.dtype)
+        * w[..., None].astype(x.dtype), axis=2)               # (B,S,E)
+    # dispatch every token to every expert it routes to (dense reference:
+    # compute is masked by the combine weights)
+    h = jnp.einsum("bsd,edf->besf", x, p["wi"])
+    if cfg.ffn_act == "swiglu":
+        g = jnp.einsum("bsd,edf->besf", x, p["wg"])
+        h = jax.nn.silu(g) * h
+    elif cfg.ffn_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("besf,efd->besd", h, p["wo"])
+    out = jnp.einsum("besd,bse->bsd", y, combine)
+    return out
+
+
+def _expert_shard_constraint(buf: jax.Array, num_experts: int) -> jax.Array:
+    """Pin the expert dim of dispatch buffers to the 'model' axis (EP): the
+    scatter feeding it becomes GSPMD's all-to-all and the expert GEMMs run
+    expert-parallel instead of token-replicated.  No-op outside a mesh
+    context or when experts don't divide (granite's 40 on TP=16)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or "model" not in mesh.axis_names:
+            return buf
+        tp = mesh.shape["model"]
+        if num_experts % tp or num_experts < tp:
+            return buf
+        spec = jax.sharding.PartitionSpec("model", None, None)
+        return jax.lax.with_sharding_constraint(buf, spec)
+    except Exception:
+        return buf
+
+
+def moe_apply_grouped(p, x: jax.Array, cfg: ModelConfig,
+                      capacity_factor: float = 1.25,
+                      expert_parallel: bool = False) -> jax.Array:
+    """Capacity-bounded sort-based dispatch (deployable path, matches
+    ``kernels/moe_gemm``): assignments are sorted by expert, scattered into
+    (E, C, d) buffers — O(T·k·d) gather/scatter + O(E·C·d·f) GEMMs, never a
+    (T, E, C) tensor.  This *is* the paper's structure: the sort/offset
+    computation is the integer stream feeding the expert-GEMM FP stream.
+    Matches ``moe_apply`` up to dropped over-capacity tokens."""
+    e = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    k = e.top_k
+    xt = x.reshape(T, d)
+    w, idx = router_probs(p, x, cfg)
+    w = w.reshape(T * k)
+    eid = idx.reshape(T * k)
+    C = max(int(capacity_factor * k * T / e.num_experts), 1)
+
+    # --- integer stream: sort by expert, per-expert slot offsets ----------
+    order = jnp.argsort(eid)                       # stable
+    eid_s = eid[order]
+    tok_s = order // k
+    w_s = w[order]
+    counts = jnp.bincount(eid, length=e.num_experts)
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(T * k) - starts[eid_s]
+    keep = slot < C
+    slot_c = jnp.where(keep, slot, 0)
+    eid_c = jnp.where(keep, eid_s, 0)
+
+    # --- dispatch: scatter kept tokens into per-expert buffers ------------
+    vals = xt[tok_s] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e.num_experts, C, d), x.dtype)
+    buf = buf.at[eid_c, slot_c].add(vals)
+    if expert_parallel:
+        # measured NET-NEGATIVE on olmoe train_4k at TP=16 (collective term
+        # 5.6 s -> 18 s outweighs the halved compute): opt-in only; see
+        # EXPERIMENTS.md §Perf "refuted: EP all-to-all dispatch"
+        buf = _expert_shard_constraint(buf, e.num_experts)
+
+    # --- FP stream: expert GEMMs (the moe_gemm kernel's computation) ------
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    if cfg.ffn_act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+        h = jax.nn.silu(g) * h
+    elif cfg.ffn_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])                    # (E,C,d)
+
+    # --- combine: gather back, weight, scatter-add over tokens ------------
+    y_tok = y[eid_c, slot_c] * (w_s * keep).astype(x.dtype)[:, None]
+    out = jnp.zeros((T, d), x.dtype).at[tok_s].add(y_tok)
+    return out.reshape(B, S, d)

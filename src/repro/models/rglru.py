@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (RecurrentGemma's temporal mixer).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with a_t = exp(-c*softplus(Λ)*r_t).
+Prefill uses a chunked associative scan (like the Mamba block); decode is an
+O(1) update, so ``long_500k`` runs for the hybrid family."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from .layers import ParamSpec
+
+_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    conv = cfg.rglru.conv_width
+    return {
+        "in_proj": ParamSpec((d, w), ("embed", "inner")),
+        "gate_proj": ParamSpec((d, w), ("embed", "inner")),
+        "conv_w": ParamSpec((conv, w), (None, "inner")),
+        "conv_b": ParamSpec((w,), ("inner",), init="zeros"),
+        "rg_w": ParamSpec((w, w), ("inner", None)),       # recurrence gate
+        "rg_b": ParamSpec((w,), ("inner",), init="zeros"),
+        "ig_w": ParamSpec((w, w), ("inner", None)),       # input gate
+        "ig_b": ParamSpec((w,), ("inner",), init="zeros"),
+        "lam": ParamSpec((w,), ("inner",), init="ones"),  # Λ
+        "out_proj": ParamSpec((w, d), ("inner", "embed")),
+    }
+
+
+def _conv1d(p, x, conv_state=None):
+    K = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, k:k + x.shape[1]] * p["conv_w"][k] for k in range(K))
+    return out + p["conv_b"], xp[:, -(K - 1):]
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["rg_w"] + p["rg_b"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["ig_w"] + p["ig_b"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def rglru_apply(p, x: jax.Array, cfg: ModelConfig, *, chunk: int = 256,
+                unroll: bool = False) -> jax.Array:
+    B, S, _ = x.shape
+    u = x @ p["in_proj"]
+    u, _ = _conv1d(p, u)
+    gate = jax.nn.gelu(x @ p["gate_proj"])
+
+    if unroll:
+        chunk = min(2048, max(chunk, S))
+    pad = (-S) % chunk
+    up = jnp.pad(u, ((0, 0), (0, pad), (0, 0))) if pad else u
+    n_chunks = up.shape[1] // chunk
+    uc = up.reshape(B, n_chunks, chunk, -1).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, uck):
+        a, bx = _gates(p, uck)
+
+        def assoc(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        decay, hseq = jax.lax.associative_scan(assoc, (a, bx), axis=1)
+        hseq = hseq + decay * h[:, None]
+        return hseq[:, -1], hseq.astype(x.dtype)
+
+    h0 = jnp.zeros((B, up.shape[-1]), jnp.float32)
+    if unroll:
+        hcur, hlist = h0, []
+        for ci in range(n_chunks):
+            hcur, hk = chunk_step(hcur, uc[ci])
+            hlist.append(hk)
+        hs = jnp.stack(hlist)
+    else:
+        _, hs = jax.lax.scan(chunk_step, h0, uc)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, -1, up.shape[-1])[:, :S]
+    return (h * gate) @ p["out_proj"]
+
+
+def rglru_decode(p, x: jax.Array, cfg: ModelConfig, h, conv_state):
+    """x: (B,1,d); h: (B,w) fp32; conv_state: (B,K-1,w)."""
+    u = x @ p["in_proj"]
+    u, conv_state = _conv1d(p, u, conv_state)
+    gate = jax.nn.gelu(x @ p["gate_proj"])
+    a, bx = _gates(p, u)
+    h = a[:, 0] * h + bx[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate) @ p["out_proj"]
+    return out, h, conv_state

@@ -1,0 +1,130 @@
+"""Mamba-1 selective-state-space block (falcon-mamba family).
+
+Prefill/train uses a *chunked* associative scan: materializing the full
+(B, S, d_inner, d_state) state sequence at 32k+ context is terabytes, so the
+sequence is processed in chunks with the recurrent state carried by
+``lax.scan`` and a parallel (associative) scan inside each chunk.  Decode is
+the O(1) recurrent update — the reason ``long_500k`` runs for this family.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from .layers import ParamSpec
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.d_state
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in, dt_rank, d_state = ssm_dims(cfg)
+    conv = cfg.ssm.d_conv
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in), ("embed", "inner2")),
+        "conv_w": ParamSpec((conv, d_in), (None, "inner")),
+        "conv_b": ParamSpec((d_in,), ("inner",), init="zeros"),
+        "x_proj": ParamSpec((d_in, dt_rank + 2 * d_state), ("inner", None)),
+        "dt_proj": ParamSpec((dt_rank, d_in), (None, "inner")),
+        "dt_bias": ParamSpec((d_in,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((d_in, d_state), ("inner", None), init="ones"),
+        "D": ParamSpec((d_in,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("inner", "embed")),
+    }
+
+
+def _ssm_coeffs(p, x_in: jax.Array, cfg: ModelConfig):
+    """x_in: (B, T, d_in) post-conv activations -> (dA, dBx, C).
+    dA: (B,T,d_in,d_state) decay; dBx same shape; C: (B,T,d_state)."""
+    d_in, dt_rank, d_state = ssm_dims(cfg)
+    proj = x_in @ p["x_proj"]
+    dt, Bc, C = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])     # (B,T,d_in)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (d_in,d_state)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)        # decay
+    dBx = (dt * x_in).astype(jnp.float32)[..., None] \
+        * Bc.astype(jnp.float32)[:, :, None, :]
+    return dA, dBx, C
+
+
+def _conv1d(p, x: jax.Array, conv_state=None):
+    """Causal depthwise conv.  x: (B, T, d_in).  conv_state: (B, K-1, d_in)."""
+    K = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, k:k + x.shape[1]] * p["conv_w"][k] for k in range(K))
+    return out + p["conv_b"], xp[:, -(K - 1):]
+
+
+def mamba_apply(p, x: jax.Array, cfg: ModelConfig, *,
+                chunk: int = 256, unroll: bool = False) -> jax.Array:
+    """Full-sequence forward.  x: (B, S, d)."""
+    B, S, _ = x.shape
+    d_in, _, d_state = ssm_dims(cfg)
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, _ = _conv1d(p, xi)
+    xi = jax.nn.silu(xi)
+
+    if unroll:
+        chunk = min(2048, max(chunk, S))
+    pad = (-S) % chunk
+    if pad:
+        xi_p = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xi_p = xi
+    n_chunks = xi_p.shape[1] // chunk
+    xc = xi_p.reshape(B, n_chunks, chunk, d_in).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, xck):
+        dA, dBx, C = _ssm_coeffs(p, xck, cfg)
+
+        def assoc(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+
+        decay, state = jax.lax.associative_scan(assoc, (dA, dBx), axis=1)
+        state = state + decay * h[:, None]          # inject carry
+        h_next = state[:, -1]
+        y = jnp.einsum("btds,bts->btd", state, C.astype(jnp.float32))
+        return h_next, y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, d_in, d_state), jnp.float32)
+    if unroll:
+        hs, ylist = h0, []
+        for ci in range(n_chunks):
+            hs, yk = chunk_step(hs, xc[ci])
+            ylist.append(yk)
+        ys = jnp.stack(ylist)
+    else:
+        _, ys = jax.lax.scan(chunk_step, h0, xc)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * chunk, d_in)[:, :S]
+    y = y + xi * p["D"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(p, x: jax.Array, cfg: ModelConfig, ssm_state, conv_state):
+    """One-token step.  x: (B, 1, d); ssm_state: (B, d_in, d_state) fp32;
+    conv_state: (B, K-1, d_in)."""
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _conv1d(p, xi, conv_state)
+    xi = jax.nn.silu(xi)
+    dA, dBx, C = _ssm_coeffs(p, xi, cfg)
+    ssm_state = dA[:, 0] * ssm_state + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", ssm_state, C[:, 0].astype(jnp.float32))
+    y = y[:, None].astype(x.dtype) + xi * p["D"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], ssm_state, conv_state

@@ -1,0 +1,99 @@
+"""Optimizers: AdamW (decoupled weight decay) + Lion, warmup-cosine schedule,
+global-norm gradient clipping.  Pure-pytree implementation (no optax)."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..config import RunConfig
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree          # unused (zeros-like scalars) for lion
+
+
+def init_opt_state(params: Pytree, kind: str = "adamw") -> OptState:
+    def zeros():
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    nu = zeros() if kind == "adamw" else jax.tree_util.tree_map(
+        lambda p: jnp.zeros((), jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=nu)
+
+
+def opt_state_shapes(param_shapes: Pytree, kind: str = "adamw") -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), param_shapes)
+    nu = zeros if kind == "adamw" else jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct((), jnp.float32), param_shapes)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=zeros, nu=nu)
+
+
+def lr_schedule(step: jax.Array, rc: RunConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(rc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - rc.warmup_steps)
+                 / jnp.maximum(rc.total_steps - rc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return rc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype),
+                                  grads), norm
+
+
+def adamw_update(params: Pytree, state: OptState, grads: Pytree,
+                 rc: RunConfig, b1=0.9, b2=0.95, eps=1e-8
+                 ) -> Tuple[Pytree, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, rc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(step, rc)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v, g):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps) + rc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, state.mu, state.nu, grads)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, new_v), {"lr": lr, "grad_norm": gnorm}
+
+
+def lion_update(params: Pytree, state: OptState, grads: Pytree, rc: RunConfig,
+                b1=0.9, b2=0.99) -> Tuple[Pytree, OptState, Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, rc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(step, rc) * 0.3
+
+    def upd(p, m, g):
+        g32 = g.astype(jnp.float32)
+        u = jnp.sign(b1 * m + (1 - b1) * g32) + rc.weight_decay * p.astype(jnp.float32)
+        m = b2 * m + (1 - b2) * g32
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m
+
+    out = jax.tree_util.tree_map(upd, params, state.mu, grads)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, state.nu), {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,146 @@
+"""Roofline extraction from AOT-compiled artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh) cell, in seconds (DESIGN.md §7):
+  compute    = HLO_FLOPs  / (chips · peak_FLOP/s)
+  memory     = HLO_bytes  / (chips · HBM_bw)
+  collective = coll_bytes / (chips · link_bw · links)
+
+``cost_analysis`` provides FLOPs/bytes of the *partitioned per-device*
+module; collective bytes are parsed from the optimized HLO text by summing
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (per device)."""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+#: TPU v5e, per chip
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 4                # 2D torus: 4 links/chip (2 axes x 2 directions)
+HBM_BYTES = 16e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_DEF_RE = re.compile(r"%?([\w.\-]+)\s*=\s*(\(?)([a-z0-9]+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*\(?\s*[a-z0-9]+\[[\d,]*\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b[^(]*\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from (optimized) HLO text."""
+    sizes: Dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        name, _, dtype, dims = m.groups()
+        if dtype in _DTYPE_BYTES:
+            sizes[name] = _shape_bytes(dtype, dims)
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind, operands = m.groups()
+        total = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            # operands appear as "bf16[2,4]{1,0} name" or just "name"
+            toks = op.split(" ")
+            ref = toks[-1].strip()
+            inline = re.match(r"([a-z0-9]+)\[([\d,]*)\]", op)
+            if ref in sizes:
+                total += sizes[ref]
+            elif inline and inline.group(1) in _DTYPE_BYTES:
+                total += _shape_bytes(inline.group(1), inline.group(2))
+        out[kind] = out.get(kind, 0) + total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    per_device_flops: float
+    per_device_bytes: float
+    per_device_coll_bytes: float
+    model_flops: float                  # 6·N(active)·D, whole step
+    per_device_hbm_peak: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.per_device_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.per_device_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.per_device_coll_bytes / (ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline-optimistic step time: max of the three terms (perfect
+        overlap); the dominant term is the floor."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs) — remat/redundancy waste."""
+        total = self.per_device_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-optimistic step time."""
+        denom = self.step_time * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "per_device_flops": self.per_device_flops,
+            "per_device_bytes": self.per_device_bytes,
+            "per_device_coll_bytes": self.per_device_coll_bytes,
+            "model_flops": self.model_flops,
+            "per_device_hbm_peak": self.per_device_hbm_peak,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck, "step_time": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio, "mfu": self.mfu,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS per step: 6·N_active·D for training (fwd+bwd), 2·N_active·D
+    for inference forward; decode processes one token per sequence."""
+    n = cfg.n_active_params()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq

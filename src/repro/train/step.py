@@ -1,0 +1,97 @@
+"""Training step: loss, gradient accumulation (microbatch scan), optional
+int8 gradient compression, AdamW update — plus the pjit factory used by the
+launcher and the multi-pod dry-run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..config import ModelConfig, RunConfig, ShapeConfig
+from ..distributed.compression import compress_grads
+from ..distributed.sharding import input_pspecs, param_pspecs
+from ..models.model import forward
+from ..optim import OptState, adamw_update, init_opt_state, opt_state_shapes
+
+Pytree = Any
+
+
+def loss_fn(params: Pytree, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            rc: RunConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits = forward(params, batch, cfg, rc)           # compute dtype
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    # sharded-vocab-friendly cross entropy: logsumexp reduces over the
+    # (possibly model-sharded) vocab axis via psum of (B,S) partials, and the
+    # label term is a masked sum — no all-gather of the logits, unlike
+    # take_along_axis (EXPERIMENTS.md §Perf, phi3 hillclimb #2)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab, dtype=lg.dtype)
+    true_logit = jnp.sum(lg * onehot, axis=-1)
+    nll = lse - true_logit
+    loss = nll.mean()
+    acc = (lg.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def _grads(params, batch, cfg, rc):
+    if rc.microbatch and rc.microbatch > 1:
+        mb = rc.microbatch
+        B = batch["labels"].shape[0]
+        assert B % mb == 0, "global batch must divide microbatch count"
+        split = jax.tree_util.tree_map(
+            lambda a: a.reshape(mb, B // mb, *a.shape[1:]), batch)
+
+        def acc_step(carry, mbatch):
+            g_acc, l_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mbatch, cfg, rc)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, loss_sum), _ = jax.lax.scan(acc_step, (g0, jnp.zeros(())), split)
+        g = jax.tree_util.tree_map(lambda x: x / mb, g)
+        return g, {"loss": loss_sum / mb}
+    (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch, cfg, rc)
+    return g, metrics
+
+
+def train_step(params: Pytree, opt: OptState, batch: Dict[str, jax.Array],
+               cfg: ModelConfig, rc: RunConfig,
+               rng: Optional[jax.Array] = None
+               ) -> Tuple[Pytree, OptState, Dict[str, jax.Array]]:
+    grads, metrics = _grads(params, batch, cfg, rc)
+    if rc.grad_compression:
+        key = rng if rng is not None else jax.random.PRNGKey(opt.step)
+        grads = compress_grads(key, grads)
+    params, opt, om = adamw_update(params, opt, grads, rc)
+    return params, opt, {**metrics, **om}
+
+
+def make_train_step(cfg: ModelConfig, shape: ShapeConfig, rc: RunConfig,
+                    mesh: Mesh):
+    """Returns (jitted step, in/out shardings) for pjit execution and AOT
+    lowering (the dry-run calls .lower on this)."""
+    pspec = param_pspecs(cfg, mesh, rc)
+    o_state = OptState(step=P(), mu=pspec, nu=pspec)
+    in_batch = input_pspecs(cfg, shape, mesh)
+    metrics = None  # replicated
+
+    def ns(tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    step = jax.jit(
+        partial(train_step, cfg=cfg, rc=rc),
+        in_shardings=(ns(pspec), ns(o_state), ns(in_batch)),
+        out_shardings=(ns(pspec), ns(o_state), None),
+        donate_argnums=(0, 1),
+    )
+    return step, (pspec, o_state, in_batch)

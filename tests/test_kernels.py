@@ -1,0 +1,148 @@
+"""Pallas kernel tests: interpret-mode allclose vs pure-jnp oracles, with
+hypothesis sweeps over shapes and dtypes (per-kernel, per DESIGN.md §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import ExecutionPolicy as EP
+from repro.kernels import (flash_attention, moe_gemm, queue_matmul,
+                           rglru_scan, ssm_scan)
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+from repro.kernels.queue_matmul.ref import matmul_ref
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+# --- queue_matmul -----------------------------------------------------------
+
+@given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300),
+       depth=st.integers(1, 4), di=st.integers(0, 1))
+@settings(max_examples=12, deadline=None)
+def test_queue_matmul_shapes(m, k, n, depth, di):
+    dtype = DTYPES[di]
+    x = jax.random.normal(KEY, (m, k), dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n), dtype)
+    y = queue_matmul(x, w, depth=depth, block=(128, 128, 128))
+    ref = matmul_ref(x, w).astype(dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("policy", list(EP))
+def test_queue_matmul_policies_agree(policy):
+    x = jax.random.normal(KEY, (130, 260))
+    w = jax.random.normal(KEY, (260, 70))
+    y = queue_matmul(x, w, policy=policy)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(matmul_ref(x, w)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --- flash_attention --------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 48), (False, 48)])
+def test_flash_attention_vs_ref(dtype, causal, window):
+    B, Hq, Hkv, S, D = 2, 4, 2, 150, 32
+    q = jax.random.normal(KEY, (B, Hq, S, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, Hkv, S, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Hkv, S, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=64)
+    kr = jnp.repeat(k, Hq // Hkv, 1).reshape(B * Hq, S, D)
+    vr = jnp.repeat(v, Hq // Hkv, 1).reshape(B * Hq, S, D)
+    ref = attention_ref(q.reshape(B * Hq, S, D), kr, vr, causal=causal,
+                        window=window).reshape(B, Hq, S, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@given(s=st.integers(2, 200), d=st.sampled_from([16, 32, 64]))
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_shape_sweep(s, d):
+    q = jax.random.normal(KEY, (1, 2, s, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, s, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, s, d))
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    ref = attention_ref(q.reshape(2, s, d), k.reshape(2, s, d),
+                        v.reshape(2, s, d), causal=True).reshape(1, 2, s, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+# --- ssm_scan ---------------------------------------------------------------
+
+@given(t=st.integers(1, 150), d=st.integers(1, 100),
+       n=st.sampled_from([4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_ssm_scan_shape_sweep(t, d, n):
+    x = jax.random.normal(KEY, (2, t, d)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (2, t, d))) * 0.1
+    A = -jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 2), (d, n)))
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 3), (2, t, n))
+    C = jax.random.normal(jax.random.fold_in(KEY, 4), (2, t, n))
+    y = ssm_scan(x, dt, A, Bm, C, bt=64, bd=64)
+    ref = ssm_scan_ref(x, dt, A, Bm, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_state_carries_across_time_blocks():
+    """T spanning several time blocks must match the sequential oracle —
+    catches any state reset at block boundaries."""
+    t, d, n = 200, 8, 4
+    x = jnp.ones((1, t, d)) * 0.1
+    dt = jnp.ones((1, t, d)) * 0.05
+    A = -jnp.ones((d, n))
+    Bm = jnp.ones((1, t, n))
+    C = jnp.ones((1, t, n))
+    y = ssm_scan(x, dt, A, Bm, C, bt=32, bd=8)
+    ref = ssm_scan_ref(x, dt, A, Bm, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- rglru_scan -------------------------------------------------------------
+
+@given(t=st.integers(1, 150), w=st.integers(1, 100))
+@settings(max_examples=10, deadline=None)
+def test_rglru_scan_shape_sweep(t, w):
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (2, t, w)))
+    bx = jax.random.normal(jax.random.fold_in(KEY, 1), (2, t, w))
+    h = rglru_scan(a, bx, bt=64, bw=64)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(rglru_scan_ref(a, bx)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --- moe_gemm ---------------------------------------------------------------
+
+@given(e=st.integers(1, 6), c=st.integers(1, 150), d=st.integers(1, 200),
+       f=st.integers(1, 200), depth=st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_moe_gemm_shape_sweep(e, c, d, f, depth):
+    x = jax.random.normal(KEY, (e, c, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (e, d, f))
+    y = moe_gemm(x, w, bc=64, bf=64, bk=64, depth=depth)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(moe_gemm_ref(x, w)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_moe_gemm_dtypes(dtype):
+    x = jax.random.normal(KEY, (2, 64, 128), dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 128, 64), dtype)
+    y = moe_gemm(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(moe_gemm_ref(x, w), np.float32),
+                               **_tol(dtype))
