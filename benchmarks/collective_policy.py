@@ -12,9 +12,9 @@ import json, time
 import jax, jax.numpy as jnp
 from repro.distributed.collective_matmul import tp_matmul
 from repro.core.policy import ExecutionPolicy as EP
+from repro.launch.mesh import make_local_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_local_mesh(2, 4)
 x = jax.random.normal(jax.random.PRNGKey(0), (2048, 1024), jnp.float32)
 w = jax.random.normal(jax.random.PRNGKey(1), (1024, 2048), jnp.float32)
 out = {}

@@ -41,5 +41,14 @@ def main():
         print(f"{name},{us:.1f},{derived:.4f}")
 
 
+def smoke():
+    """CI-grade: small sample count, assert the headline stays in band."""
+    rows = run(n_samples=64)
+    peak = next(v for n, _, v in rows if n == "claims_peak_ipc_v2")
+    assert 1.4 <= peak <= 2.0, f"peak IPC out of band at n=64: {peak}"
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.4f}")
+
+
 if __name__ == "__main__":
     main()

@@ -1,13 +1,36 @@
 """Benchmark entry point — one section per paper table/figure plus the
-framework-level experiments.  Prints ``name,us_per_call,derived`` CSV."""
+framework-level experiments.  Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke`` runs the CI-grade path: every section that defines a ``smoke()``
+hook runs its tiny-grid variant, and **nothing is caught** — any section
+failure exits non-zero immediately, so sections cannot silently rot.
+"""
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
-    from . import collective_policy, fig3, kernel_bench, roofline_table
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grids, no failure-swallowing (CI gate)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        # deliberately no try/except: a smoke failure must fail the run
+        from . import dse, fig3
+        for title, fn in [
+            ("fig3 smoke (machine model, small n)", fig3.smoke),
+            ("dse smoke (tiny sweep grid + equivalence fuzz)", dse.smoke),
+        ]:
+            print(f"# --- {title} ---")
+            fn()
+        return
+
+    from . import collective_policy, dse, fig3, kernel_bench, roofline_table
     sections = [
         ("fig3 (paper Fig.3a/b/c via the machine model)", fig3),
+        ("dse (design-space sweep + Pareto fronts)", dse),
         ("kernels (interpret-mode micro-bench)", kernel_bench),
         ("collective policy (bulk vs ring)", collective_policy),
         ("roofline (from dry-run artifacts)", roofline_table),

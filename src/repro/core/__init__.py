@@ -1,18 +1,31 @@
 """COPIFTv2 core: the paper's methodology as executable transforms + a
-cycle-approximate Snitch/FPSS machine model, plus the ExecutionPolicy enum
-that threads the dual-stream idea through the TPU layers of the framework."""
+cycle-approximate Snitch/FPSS machine model, a design-space exploration
+engine sweeping (kernel x policy x queue geometry x unroll) grids with
+Pareto-front extraction, plus the ExecutionPolicy enum that threads the
+dual-stream idea through the TPU layers of the framework."""
 from .bench_kernels import KERNELS
 from .dfg import LoopDFG, Node, s
 from .isa import Instr, OpKind, Queue, Unit
-from .machine import DeadlockError, MachineConfig, Program, SimResult, simulate
-from .metrics import (PAPER_CLAIMS, KernelComparison, geomean, run_suite,
-                      summarize)
+from .machine import (DeadlockError, MachineConfig, Program, SimResult,
+                      Stepper, simulate)
+from .metrics import (PAPER_CLAIMS, KernelComparison, best, geomean,
+                      group_by, run_suite, summarize)
+from .pareto import (dominates, format_front, pareto_by_kernel, pareto_front,
+                     write_csv)
 from .policy import ExecutionPolicy
+from .sweep import (CSV_FIELDS, SweepPoint, SweepRecord, grid, run_point,
+                    run_sweep, sweep_summary)
 from .transform import TransformConfig, analyze, lower
 
 __all__ = [
     "KERNELS", "LoopDFG", "Node", "s", "Instr", "OpKind", "Queue", "Unit",
-    "DeadlockError", "MachineConfig", "Program", "SimResult", "simulate",
-    "PAPER_CLAIMS", "KernelComparison", "geomean", "run_suite", "summarize",
+    "DeadlockError", "MachineConfig", "Program", "SimResult", "Stepper",
+    "simulate",
+    "PAPER_CLAIMS", "KernelComparison", "best", "geomean",
+    "group_by", "run_suite", "summarize",
+    "dominates", "format_front", "pareto_by_kernel", "pareto_front",
+    "write_csv",
     "ExecutionPolicy", "TransformConfig", "analyze", "lower",
+    "CSV_FIELDS", "SweepPoint", "SweepRecord", "grid", "run_point",
+    "run_sweep", "sweep_summary",
 ]

@@ -10,11 +10,18 @@ concurrently — IPC is bounded by 2.
 Queues have finite depth with blocking push/pop semantics: a pop stalls the
 consuming unit until the head entry is visible; a push stalls the producer
 while the queue is full.  Stalls, overlap and IPC *emerge* from the model;
-nothing is hard-coded per policy.
+nothing is hard-coded per policy.  Every cycle a unit fails to issue is
+attributed to one cause (``busy`` / ``dep`` / ``queue_empty`` /
+``queue_full``), giving the stall breakdown the DSE sweep reports.
 
 The simulator doubles as a functional interpreter: when instructions carry
 ``fn``, values flow through registers, queues and memory channels, letting
 tests assert that every transform preserves the kernel's semantics.
+
+The whole simulation state lives in :class:`Stepper` — re-entrant, cheap to
+instantiate, and independent of any module-level state — so design-space
+sweeps (``core.sweep``) can run many simulations concurrently in process-pool
+workers.  :func:`simulate` remains the one-shot convenience entry point.
 """
 from __future__ import annotations
 
@@ -51,6 +58,10 @@ class Program:
 
 @dataclass
 class SimResult:
+    """Simulation outcome.  Everything here is plain data (strings, numbers,
+    enums, containers thereof) so a result pickles cleanly across process
+    boundaries; ``summary()`` flattens it further into primitives for CSV /
+    JSON emission when the (possibly large) ``env`` is not wanted."""
     name: str
     policy: ExecutionPolicy
     cycles: int
@@ -62,6 +73,7 @@ class SimResult:
     pop_seq: Dict[Queue, List[str]]
     max_queue_occupancy: Dict[Queue, int]
     fifo_violations: List[Tuple[str, str, str, str]] = field(default_factory=list)
+    stalls: Dict[str, int] = field(default_factory=dict)
 
     @property
     def total_instrs(self) -> int:
@@ -86,128 +98,194 @@ class SimResult:
     def outputs(self, output_values: List[str]) -> Dict[str, Any]:
         return {v: self.env.get(v) for v in output_values}
 
+    def summary(self) -> Dict[str, Any]:
+        """Primitive-typed record (no env, no enum keys) for aggregation."""
+        return {
+            "name": self.name,
+            "policy": self.policy.value,
+            "cycles": self.cycles,
+            "n_samples": self.n_samples,
+            "instrs_int": self.instrs.get("int", 0),
+            "instrs_fp": self.instrs.get("fp", 0),
+            "ipc": self.ipc,
+            "energy": self.energy,
+            "power": self.power,
+            "throughput": self.throughput,
+            "efficiency": self.efficiency,
+            "max_occ_i2f": self.max_queue_occupancy.get(Queue.I2F, 0),
+            "max_occ_f2i": self.max_queue_occupancy.get(Queue.F2I, 0),
+            "fifo_violations": len(self.fifo_violations),
+            "stalls": dict(self.stalls),
+        }
+
 
 class DeadlockError(RuntimeError):
     pass
 
 
-def simulate(prog: Program, cfg: Optional[MachineConfig] = None) -> SimResult:
-    cfg = cfg or MachineConfig()
-    ready: Dict[str, int] = {k: 0 for k in prog.init_env}
-    env: Dict[str, Any] = dict(prog.init_env)
+#: stall-cause keys recorded by the stepper (per unit: ``f"{unit}_{cause}"``)
+STALL_CAUSES = ("busy", "dep", "queue_empty", "queue_full")
 
-    queues: Dict[Queue, deque] = {q: deque() for q in Queue}
-    occupancy: Dict[Queue, int] = {q: 0 for q in Queue}       # incl. in-flight
-    max_occ: Dict[Queue, int] = {q: 0 for q in Queue}
-    push_seq: Dict[Queue, List[str]] = {q: [] for q in Queue}
-    pop_seq: Dict[Queue, List[str]] = {q: [] for q in Queue}
-    fifo_violations: List[Tuple[str, str, str, str]] = []
 
-    if prog.mode == "single":
-        # the lowering merges everything into one stream (the integer core
-        # fetches all instructions, offloading FP ones to the FPSS)
-        assert len(prog.streams) == 1, "single mode expects one merged stream"
-        order: List[Tuple[Unit, List[Instr]]] = list(prog.streams.items())
-    else:
-        # INT first: gives the integer core priority on shared resources.
-        order = [(u, prog.streams[u]) for u in (Unit.INT, Unit.FP) if u in prog.streams]
+class Stepper:
+    """Re-entrant cycle stepper for one :class:`Program`.
 
-    pcs = {u: 0 for u, _ in order}
-    unit_busy = {Unit.INT: 0, Unit.FP: 0}
-    instr_count = {"int": 0, "fp": 0}
-    energy = 0.0
-    cycle = 0
-    last_progress = 0
-    finish = 0
+    All simulation state is instance state; ``step()`` advances one cycle and
+    ``run()`` drives the program to completion.  Construction is cheap (a few
+    dicts over the program's streams), which is what lets ``core.sweep`` spin
+    one up per configuration inside process-pool workers.
+    """
 
-    def can_issue(ins: Instr, now: int) -> bool:
-        if unit_busy[ins.unit] > now:
-            return False
+    def __init__(self, prog: Program, cfg: Optional[MachineConfig] = None):
+        self.prog = prog
+        self.cfg = cfg or MachineConfig()
+        self.ready: Dict[str, int] = {k: 0 for k in prog.init_env}
+        self.env: Dict[str, Any] = dict(prog.init_env)
+
+        self.queues: Dict[Queue, deque] = {q: deque() for q in Queue}
+        self.occupancy: Dict[Queue, int] = {q: 0 for q in Queue}  # incl. in-flight
+        self.max_occ: Dict[Queue, int] = {q: 0 for q in Queue}
+        self.push_seq: Dict[Queue, List[str]] = {q: [] for q in Queue}
+        self.pop_seq: Dict[Queue, List[str]] = {q: [] for q in Queue}
+        self.fifo_violations: List[Tuple[str, str, str, str]] = []
+
+        if prog.mode == "single":
+            # the lowering merges everything into one stream (the integer core
+            # fetches all instructions, offloading FP ones to the FPSS)
+            assert len(prog.streams) == 1, "single mode expects one merged stream"
+            self.order: List[Tuple[Unit, List[Instr]]] = list(prog.streams.items())
+        else:
+            # INT first: gives the integer core priority on shared resources.
+            self.order = [(u, prog.streams[u])
+                          for u in (Unit.INT, Unit.FP) if u in prog.streams]
+
+        self.pcs = {u: 0 for u, _ in self.order}
+        self.unit_busy = {Unit.INT: 0, Unit.FP: 0}
+        self.instr_count = {"int": 0, "fp": 0}
+        self.energy = 0.0
+        self.cycle = 0
+        self.last_progress = 0
+        self.finish = 0
+        self.stalls: Dict[str, int] = {}
+
+    # -- issue logic --------------------------------------------------------
+
+    def _block_reason(self, ins: Instr, now: int) -> Optional[str]:
+        """None if ``ins`` can issue at ``now``; else the first stall cause."""
+        if self.unit_busy[ins.unit] > now:
+            return "busy"
         need: Dict[Queue, int] = {}
         for src in ins.srcs:
             if isinstance(src, Queue):
                 k = need.get(src, 0)
-                q = queues[src]
+                q = self.queues[src]
                 if len(q) <= k or q[k][0] > now:
-                    return False
+                    return "queue_empty"
                 need[src] = k + 1
             else:
-                t = ready.get(src)
+                t = self.ready.get(src)
                 if t is None or t > now:
-                    return False
+                    return "dep"
         room: Dict[Queue, int] = {}
         for q in ins.pushes:
             room[q] = room.get(q, 0) + 1
-            if occupancy[q] + room[q] > cfg.queue_depth:
-                return False
-        return True
+            if self.occupancy[q] + room[q] > self.cfg.queue_depth:
+                return "queue_full"
+        return None
 
-    def do_issue(ins: Instr, now: int) -> int:
-        nonlocal energy
+    def _do_issue(self, ins: Instr, now: int) -> int:
+        cfg = self.cfg
         t_done = now + ins.spec.latency
         opvals = []
         n_pop = 0
         for src in ins.srcs:
             if isinstance(src, Queue):
-                _, vname, val = queues[src].popleft()
-                occupancy[src] -= 1
-                pop_seq[src].append(vname)
+                _, vname, val = self.queues[src].popleft()
+                self.occupancy[src] -= 1
+                self.pop_seq[src].append(vname)
                 if ins.expects and ins.expects[n_pop] != vname:
-                    fifo_violations.append(
+                    self.fifo_violations.append(
                         (ins.label, src.value, ins.expects[n_pop], vname))
                 n_pop += 1
                 opvals.append(val)
             else:
-                opvals.append(env.get(src))
+                opvals.append(self.env.get(src))
         result = None
         if cfg.evaluate and ins.fn is not None:
             result = ins.fn(*opvals)
         if ins.dst is not None:
-            ready[ins.dst] = t_done
-            env[ins.dst] = result
+            self.ready[ins.dst] = t_done
+            self.env[ins.dst] = result
         for q in ins.pushes:
-            queues[q].append((t_done + cfg.queue_latency, ins.push_val or ins.label, result))
-            occupancy[q] += 1
-            max_occ[q] = max(max_occ[q], occupancy[q])
-            push_seq[q].append(ins.push_val or ins.label)
+            self.queues[q].append(
+                (t_done + cfg.queue_latency, ins.push_val or ins.label, result))
+            self.occupancy[q] += 1
+            self.max_occ[q] = max(self.max_occ[q], self.occupancy[q])
+            self.push_seq[q].append(ins.push_val or ins.label)
         if ins.spec.blocking:
-            unit_busy[ins.unit] = t_done
-        energy += ins.energy(frep=prog.frep and ins.unit is Unit.FP)
-        instr_count[ins.unit.value] += 1
+            self.unit_busy[ins.unit] = t_done
+        self.energy += ins.energy(frep=self.prog.frep and ins.unit is Unit.FP)
+        self.instr_count[ins.unit.value] += 1
         return t_done
 
-    while any(pcs[u] < len(lst) for u, lst in order):
+    # -- stepping -----------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return all(self.pcs[u] >= len(lst) for u, lst in self.order)
+
+    def step(self) -> bool:
+        """Advance one cycle; returns False once the program has retired."""
+        if self.done:
+            return False
         issued = False
-        for u, lst in order:
-            pc = pcs[u]
+        for u, lst in self.order:
+            pc = self.pcs[u]
             if pc >= len(lst):
                 continue
             ins = lst[pc]
-            if can_issue(ins, cycle):
-                t_done = do_issue(ins, cycle)
-                finish = max(finish, t_done)
-                pcs[u] = pc + 1
+            reason = self._block_reason(ins, self.cycle)
+            if reason is None:
+                t_done = self._do_issue(ins, self.cycle)
+                self.finish = max(self.finish, t_done)
+                self.pcs[u] = pc + 1
                 issued = True
+            else:
+                key = f"{ins.unit.value}_{reason}"
+                self.stalls[key] = self.stalls.get(key, 0) + 1
         if issued:
-            last_progress = cycle
-        if cycle - last_progress > cfg.deadlock_limit:
-            stuck = {u.value: (pcs[u], len(lst), str(lst[pcs[u]]) if pcs[u] < len(lst) else "-")
-                     for u, lst in order}
-            raise DeadlockError(f"{prog.name}/{prog.policy.value}: no progress; {stuck}")
-        cycle += 1
+            self.last_progress = self.cycle
+        if self.cycle - self.last_progress > self.cfg.deadlock_limit:
+            stuck = {u.value: (self.pcs[u], len(lst),
+                               str(lst[self.pcs[u]]) if self.pcs[u] < len(lst) else "-")
+                     for u, lst in self.order}
+            raise DeadlockError(
+                f"{self.prog.name}/{self.prog.policy.value}: no progress; {stuck}")
+        self.cycle += 1
+        return True
 
-    cycles = max(finish, cycle)
-    energy += E_STATIC_PER_CYCLE * cycles
-    return SimResult(
-        name=prog.name,
-        policy=prog.policy,
-        cycles=cycles,
-        n_samples=prog.n_samples,
-        instrs=instr_count,
-        energy=energy,
-        env=env,
-        push_seq=push_seq,
-        pop_seq=pop_seq,
-        max_queue_occupancy=max_occ,
-        fifo_violations=fifo_violations,
-    )
+    def run(self) -> SimResult:
+        while self.step():
+            pass
+        return self.result()
+
+    def result(self) -> SimResult:
+        cycles = max(self.finish, self.cycle)
+        return SimResult(
+            name=self.prog.name,
+            policy=self.prog.policy,
+            cycles=cycles,
+            n_samples=self.prog.n_samples,
+            instrs=dict(self.instr_count),
+            energy=self.energy + E_STATIC_PER_CYCLE * cycles,
+            env=self.env,
+            push_seq=self.push_seq,
+            pop_seq=self.pop_seq,
+            max_queue_occupancy=self.max_occ,
+            fifo_violations=self.fifo_violations,
+            stalls=dict(self.stalls),
+        )
+
+
+def simulate(prog: Program, cfg: Optional[MachineConfig] = None) -> SimResult:
+    return Stepper(prog, cfg).run()

@@ -3,17 +3,35 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional
+from typing import (Any, Callable, Dict, Hashable, Iterable, List, Optional,
+                    TypeVar)
 
 from .bench_kernels import KERNELS
 from .machine import MachineConfig, SimResult, simulate
 from .policy import ExecutionPolicy
 from .transform import TransformConfig, lower
 
+T = TypeVar("T")
+
 
 def geomean(xs: Iterable[float]) -> float:
     xs = list(xs)
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def group_by(items: Iterable[T],
+             key: Callable[[T], Hashable]) -> Dict[Hashable, List[T]]:
+    """Bucket ``items`` by ``key(item)``, preserving input order per bucket."""
+    out: Dict[Hashable, List[T]] = {}
+    for it in items:
+        out.setdefault(key(it), []).append(it)
+    return out
+
+
+def best(items: Iterable[T], attr: str, maximize: bool = True) -> T:
+    """The item with the extreme value of ``attr`` (works on records too)."""
+    pick = max if maximize else min
+    return pick(items, key=lambda it: getattr(it, attr))
 
 
 @dataclass

@@ -1,0 +1,85 @@
+"""Pareto-front extraction and CSV emission for DSE sweep records.
+
+The sweep trades two objectives per kernel: IPC (maximize) against energy
+(minimize).  A configuration is *dominated* when another configuration is at
+least as good on both axes and strictly better on one; the Pareto front is
+the set of non-dominated configurations — the only hardware points worth
+building.  The helpers are attribute-generic so other trade-offs (e.g.
+throughput vs power) reuse the same machinery.
+"""
+from __future__ import annotations
+
+import csv
+import operator
+from typing import Dict, Iterable, List, Sequence, TextIO, Union
+
+from .metrics import group_by
+from .sweep import CSV_FIELDS, SweepRecord, record_to_row
+
+
+def dominates(a: SweepRecord, b: SweepRecord,
+              maximize: str = "ipc", minimize: str = "energy") -> bool:
+    """True if ``a`` is at least as good as ``b`` on both axes and strictly
+    better on at least one."""
+    ga, gb = getattr(a, maximize), getattr(b, maximize)
+    ca, cb = getattr(a, minimize), getattr(b, minimize)
+    return ga >= gb and ca <= cb and (ga > gb or ca < cb)
+
+
+def pareto_front(records: Iterable[SweepRecord],
+                 maximize: str = "ipc",
+                 minimize: str = "energy") -> List[SweepRecord]:
+    """Non-dominated subset of ``records``, sorted by the minimized axis.
+
+    Only ``status == "ok"`` records participate; rejected/deadlocked points
+    cannot be on a hardware trade-off curve.
+    """
+    ok = [r for r in records if r.ok]
+    # sort: ascending cost, descending gain — then one monotone pass suffices
+    ok.sort(key=lambda r: (getattr(r, minimize), -getattr(r, maximize)))
+    front: List[SweepRecord] = []
+    best_gain = best_gain_cost = None
+    for r in ok:
+        g, c = getattr(r, maximize), getattr(r, minimize)
+        if best_gain is None or g > best_gain:
+            front.append(r)
+            best_gain, best_gain_cost = g, c
+        elif g == best_gain and c == best_gain_cost:
+            front.append(r)          # exact tie on both axes: also non-dominated
+    return front
+
+
+def pareto_by_kernel(records: Iterable[SweepRecord],
+                     maximize: str = "ipc",
+                     minimize: str = "energy") -> Dict[str, List[SweepRecord]]:
+    """Per-kernel Pareto fronts (kernels are not comparable to each other)."""
+    return {k: pareto_front(rs, maximize, minimize)
+            for k, rs in sorted(group_by(records, operator.attrgetter("kernel")).items())}
+
+
+def write_csv(records: Sequence[SweepRecord],
+              dest: Union[str, TextIO]) -> int:
+    """Write sweep records as CSV (``CSV_FIELDS`` order); returns row count."""
+    def _emit(fh: TextIO) -> int:
+        w = csv.DictWriter(fh, fieldnames=list(CSV_FIELDS))
+        w.writeheader()
+        for r in records:
+            w.writerow(record_to_row(r))
+        return len(records)
+
+    if isinstance(dest, str):
+        with open(dest, "w", newline="") as fh:
+            return _emit(fh)
+    return _emit(dest)
+
+
+def format_front(front: Sequence[SweepRecord]) -> str:
+    """Human-readable table for one kernel's Pareto front."""
+    hdr = (f"{'policy':<10} {'depth':>5} {'lat':>3} {'unroll':>6} "
+           f"{'ipc':>6} {'energy':>10} {'cycles':>7} {'eff':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in front:
+        lines.append(f"{r.policy:<10} {r.queue_depth:>5} {r.queue_latency:>3} "
+                     f"{r.unroll:>6} {r.ipc:>6.3f} {r.energy:>10.1f} "
+                     f"{r.cycles:>7} {r.efficiency:>9.2e}")
+    return "\n".join(lines)

@@ -1,0 +1,195 @@
+"""Design-space exploration over the machine model (the DSE engine).
+
+The paper's headline numbers come from one hardware point (queue depth 4,
+latency 1, unroll 8).  This module sweeps the whole configuration grid —
+(kernel x policy x queue_depth x queue_latency x unroll x unroll_int) — through
+the simulator and reduces each run to a flat :class:`SweepRecord` with IPC,
+energy, throughput and the stall breakdown, ready for Pareto extraction
+(``core.pareto``) and CSV emission.
+
+Every sweep point doubles as a correctness test: the simulated program's
+outputs are compared bit-for-bit against the sequential baseline interpreter
+(``LoopDFG.eval_reference``), so a large sweep is also the repo's largest
+semantics fuzzer for the COPIFT/COPIFTv2 lowerings.
+
+Sweep points are plain primitives (no lambdas, no Programs), so they pickle
+across process boundaries; :func:`run_sweep` fans the grid out over a process
+pool (the stepper is pure Python — processes, not threads, buy parallelism)
+and falls back to in-process execution when a pool is unavailable.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .bench_kernels import KERNELS
+from .machine import DeadlockError, MachineConfig, Stepper
+from .metrics import best, geomean, group_by
+from .policy import ExecutionPolicy
+from .transform import TransformConfig, lower
+
+
+@dataclass(frozen=True)
+class SweepPoint:
+    """One configuration in the design space.  All fields are primitives so
+    points (and lists of them) pickle cleanly into pool workers."""
+    kernel: str
+    policy: str                      # ExecutionPolicy value
+    queue_depth: int = 4
+    queue_latency: int = 1
+    unroll: int = 8
+    unroll_int: Optional[int] = None
+    n_samples: int = 64
+
+
+@dataclass
+class SweepRecord:
+    """Flat, serializable result for one sweep point."""
+    kernel: str
+    policy: str
+    queue_depth: int
+    queue_latency: int
+    unroll: int
+    unroll_int: Optional[int]
+    n_samples: int
+    status: str                      # "ok" | "rejected" | "deadlock"
+    detail: str = ""
+    cycles: int = 0
+    ipc: float = 0.0
+    energy: float = 0.0
+    power: float = 0.0
+    throughput: float = 0.0
+    efficiency: float = 0.0
+    instrs_int: int = 0
+    instrs_fp: int = 0
+    max_occ_i2f: int = 0
+    max_occ_f2i: int = 0
+    fifo_violations: int = 0
+    equivalent: bool = False         # outputs bit-identical to the interpreter
+    stalls: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+#: column order for CSV emission (see ``core.pareto.write_csv``)
+CSV_FIELDS: Tuple[str, ...] = (
+    "kernel", "policy", "queue_depth", "queue_latency", "unroll", "unroll_int",
+    "n_samples", "status", "cycles", "ipc", "energy", "power", "throughput",
+    "efficiency", "instrs_int", "instrs_fp", "max_occ_i2f", "max_occ_f2i",
+    "fifo_violations", "equivalent", "stalls", "detail",
+)
+
+
+def grid(kernels: Optional[Sequence[str]] = None,
+         policies: Optional[Sequence[ExecutionPolicy]] = None,
+         queue_depths: Sequence[int] = (1, 2, 4, 8),
+         queue_latencies: Sequence[int] = (1,),
+         unrolls: Sequence[int] = (8,),
+         unroll_ints: Sequence[Optional[int]] = (None,),
+         n_samples: int = 64) -> List[SweepPoint]:
+    """Enumerate the cartesian configuration grid as sweep points."""
+    ks = list(kernels) if kernels else sorted(KERNELS)
+    ps = list(policies) if policies else list(ExecutionPolicy)
+    unknown = [k for k in ks if k not in KERNELS]
+    if unknown:
+        raise KeyError(f"unknown kernels: {unknown} (have {sorted(KERNELS)})")
+    return [
+        SweepPoint(kernel=k, policy=ExecutionPolicy.parse(p).value,
+                   queue_depth=d, queue_latency=lat, unroll=u, unroll_int=ui,
+                   n_samples=n_samples)
+        for k, p, d, lat, u, ui in itertools.product(
+            ks, ps, queue_depths, queue_latencies, unrolls, unroll_ints)
+    ]
+
+
+def run_point(pt: SweepPoint) -> SweepRecord:
+    """Lower + simulate one configuration and check baseline equivalence.
+
+    Never raises for model-level outcomes: infeasible schedules come back as
+    ``status="rejected"`` and runtime deadlocks as ``status="deadlock"`` so a
+    sweep always yields one record per point.
+    """
+    dfg = KERNELS[pt.kernel]
+    policy = ExecutionPolicy.parse(pt.policy)
+    base = dict(kernel=pt.kernel, policy=policy.value,
+                queue_depth=pt.queue_depth, queue_latency=pt.queue_latency,
+                unroll=pt.unroll, unroll_int=pt.unroll_int,
+                n_samples=pt.n_samples)
+    tcfg = TransformConfig(unroll=pt.unroll, unroll_int=pt.unroll_int,
+                           batch=min(32, pt.n_samples),
+                           queue_depth=pt.queue_depth, n_samples=pt.n_samples)
+    mcfg = MachineConfig(queue_depth=pt.queue_depth,
+                         queue_latency=pt.queue_latency)
+    try:
+        prog = lower(dfg, policy, tcfg)
+    except ValueError as e:
+        return SweepRecord(**base, status="rejected", detail=str(e))
+    try:
+        res = Stepper(prog, mcfg).run()
+    except DeadlockError as e:
+        return SweepRecord(**base, status="deadlock", detail=str(e))
+    ref = dfg.eval_reference(pt.n_samples)
+    equivalent = all(
+        [res.env.get(f"{node.name}@{i}") for i in range(pt.n_samples)]
+        == ref[node.name]
+        for node in dfg.outputs())
+    s = res.summary()
+    return SweepRecord(
+        **base, status="ok", cycles=s["cycles"], ipc=s["ipc"],
+        energy=s["energy"], power=s["power"], throughput=s["throughput"],
+        efficiency=s["efficiency"], instrs_int=s["instrs_int"],
+        instrs_fp=s["instrs_fp"], max_occ_i2f=s["max_occ_i2f"],
+        max_occ_f2i=s["max_occ_f2i"], fifo_violations=s["fifo_violations"],
+        equivalent=equivalent, stalls=s["stalls"])
+
+
+def run_sweep(points: Sequence[SweepPoint],
+              workers: Optional[int] = None) -> List[SweepRecord]:
+    """Run every point, in input order.  ``workers=None`` auto-sizes a
+    process pool to the machine; ``workers<=1`` forces in-process execution.
+    Pool startup failures (restricted sandboxes) degrade to serial."""
+    points = list(points)
+    if workers is None:
+        workers = min(os.cpu_count() or 1, max(1, len(points) // 8))
+    if workers > 1 and len(points) > 1:
+        try:
+            from concurrent.futures import ProcessPoolExecutor
+            from concurrent.futures.process import BrokenProcessPool
+            chunk = max(1, len(points) // (workers * 4))
+            with ProcessPoolExecutor(max_workers=workers) as pool:
+                return list(pool.map(run_point, points, chunksize=chunk))
+        except (ImportError, OSError, PermissionError, BrokenProcessPool):
+            pass                     # no usable pool: run in-process below
+    return [run_point(pt) for pt in points]
+
+
+def sweep_summary(records: Iterable[SweepRecord]) -> Dict[str, float]:
+    """Aggregate a sweep into headline scalars (geomeans over ok points)."""
+    recs = [r for r in records]
+    ok = [r for r in recs if r.ok]
+    out: Dict[str, float] = {
+        "n_points": float(len(recs)),
+        "n_ok": float(len(ok)),
+        "n_rejected": float(sum(r.status == "rejected" for r in recs)),
+        "n_equivalent": float(sum(r.equivalent for r in ok)),
+        "n_fifo_violations": float(sum(r.fifo_violations for r in ok)),
+    }
+    if ok:
+        out["peak_ipc"] = best(ok, "ipc").ipc
+        out["best_efficiency"] = best(ok, "efficiency").efficiency
+        for pol, rs in sorted(group_by(ok, lambda r: r.policy).items()):
+            out[f"geomean_ipc_{pol}"] = geomean(r.ipc for r in rs)
+            out[f"geomean_efficiency_{pol}"] = geomean(r.efficiency for r in rs)
+    return out
+
+
+def record_to_row(rec: SweepRecord) -> Dict[str, object]:
+    """A CSV-ready dict in :data:`CSV_FIELDS` order (stalls packed)."""
+    d = asdict(rec)
+    d["stalls"] = ";".join(f"{k}={v}" for k, v in sorted(rec.stalls.items()))
+    d["equivalent"] = int(rec.equivalent)
+    return {k: d[k] for k in CSV_FIELDS}

@@ -61,12 +61,18 @@ def default_runconfig(shape: ShapeConfig, policy: str = "copiftv2",
                      analysis_mode=analysis)
 
 
+def _mesh_context(mesh: Mesh):
+    """Enter a mesh so PartitionSpec sharding constraints resolve: newer JAX
+    uses jax.set_mesh; on 0.4.x the Mesh itself is the context manager."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
 def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                rc: Optional[RunConfig] = None):
     """Build + lower the pjit step for one cell (traced inside a mesh
     context so PartitionSpec sharding constraints resolve)."""
     rc = rc or default_runconfig(shape)
-    with jax.set_mesh(mesh):
+    with _mesh_context(mesh):
         return _lower_cell_inner(cfg, shape, mesh, rc)
 
 

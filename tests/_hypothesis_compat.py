@@ -1,0 +1,70 @@
+"""Optional-``hypothesis`` shim.
+
+The property-based tests use ``hypothesis`` when it is installed.  When it is
+absent (the benchmark container does not ship it, and the repo installs no
+extra packages), importing this module still succeeds: ``given`` becomes a
+decorator whose wrapped test skips with a clear reason, and ``st`` / its
+``composite`` decorator become inert stand-ins so strategy construction at
+module import time keeps working.
+
+Test modules import the trio from here instead of from ``hypothesis``::
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+"""
+import functools
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    SKIP_REASON = "hypothesis not installed; property-based test skipped"
+
+    class _StubStrategy:
+        """Placeholder for a hypothesis strategy; never drawn from."""
+
+        def __init__(self, desc):
+            self._desc = desc
+
+        def __repr__(self):
+            return f"<stub strategy {self._desc}>"
+
+    class _StubStrategies:
+        """Any ``st.<name>(...)`` call yields a placeholder strategy."""
+
+        @staticmethod
+        def composite(fn):
+            @functools.wraps(fn)
+            def build(*args, **kwargs):
+                return _StubStrategy(f"composite:{fn.__name__}")
+            return build
+
+        def __getattr__(self, name):
+            def make(*args, **kwargs):
+                return _StubStrategy(name)
+            return make
+
+    st = _StubStrategies()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # deliberately NOT functools.wraps: the wrapper must present a
+            # zero-argument signature or pytest resolves the strategy
+            # parameters as fixtures
+            def wrapper():
+                pytest.skip(SKIP_REASON)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

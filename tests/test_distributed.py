@@ -15,7 +15,16 @@ from repro.configs import get_config, get_reduced
 from repro.distributed.sharding import _leaf_pspec, param_pspecs
 from repro.roofline import Roofline, collective_bytes
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+def _abstract_mesh(shape, names):
+    """AbstractMesh across JAX API generations: >=0.5 takes (shape, names);
+    0.4.x takes one ((name, size), ...) tuple."""
+    try:
+        return AbstractMesh(shape, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, shape)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
 RC = RunConfig()
 RC_FSDP = RunConfig(fsdp=True)
 
@@ -121,8 +130,8 @@ def test_ring_matmul_multidevice_subprocess():
         "import jax, jax.numpy as jnp, numpy as np\n"
         "from repro.distributed.collective_matmul import tp_matmul\n"
         "from repro.core.policy import ExecutionPolicy as EP\n"
-        "mesh = jax.make_mesh((2, 4), ('data', 'model'),\n"
-        "    axis_types=(jax.sharding.AxisType.Auto,) * 2)\n"
+        "from repro.launch.mesh import make_local_mesh\n"
+        "mesh = make_local_mesh(2, 4)\n"
         "x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))\n"
         "w = jax.random.normal(jax.random.PRNGKey(1), (32, 48))\n"
         "ref = x @ w\n"

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import CheckpointManager, restore, save
 from repro.checkpoint.manager import latest_step
@@ -178,8 +178,8 @@ def test_trainer_recovers_from_injected_fault(tmp_path):
             raise InjectedFault(f"device loss @ {step}")
 
     def mesh_factory():
-        return jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_local_mesh
+        return make_local_mesh(1, 1)
 
     tr = FaultTolerantTrainer(cfg, shape, RC, mesh_factory, str(tmp_path),
                               ckpt_every=10, fault_hook=fault_hook)

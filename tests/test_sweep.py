@@ -1,0 +1,240 @@
+"""DSE engine tests: golden-trace regressions locking the machine model's
+cycle counts / IPC / energy at pinned design points, monotonicity properties
+of the queue geometry, FIFO-discipline and cross-policy equivalence properties
+over randomly sampled sweep configurations, Pareto-front laws, and the
+``benchmarks.run --smoke`` CI gate."""
+import os
+import random
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import (KERNELS, MachineConfig, Stepper, SweepPoint,
+                        TransformConfig, dominates, grid, lower,
+                        pareto_by_kernel, pareto_front, run_point, run_sweep,
+                        simulate, sweep_summary, write_csv)
+from repro.core.policy import ExecutionPolicy as P
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# ---------------------------------------------------------------------------
+# Golden traces: the machine model is deterministic pure Python, so cycle
+# counts, instruction counts and energy are locked exactly.  A diff here means
+# the simulator's timing/energy semantics changed — bump deliberately, with a
+# changelog note, never incidentally.
+# ---------------------------------------------------------------------------
+
+GOLDEN = [
+    # (kernel, policy, queue_depth, queue_latency, cycles, instrs, energy)
+    ("expf", "baseline", 4, 1, 1232, 1232, 30495.199999999975),
+    ("expf", "copift", 4, 1, 1124, 1506, 29132.599999999922),
+    ("expf", "copiftv2", 4, 1, 721, 1232, 19073.99999999996),
+    ("expf", "copiftv2", 1, 1, 870, 1232, 22351.99999999996),
+    ("expf", "copiftv2", 8, 2, 708, 1232, 18787.99999999996),
+    ("poly_lcg", "copift", 4, 1, 565, 728, 14982.199999999983),
+    ("poly_lcg", "copiftv2", 2, 1, 407, 592, 10898.799999999996),
+    ("dequant_dot", "copiftv2", 4, 1, 420, 784, 11715.999999999987),
+    ("box_muller", "copiftv2", 4, 1, 1374, 784, 32998.39999999998),
+    ("logf", "baseline", 4, 1, 917, 912, 23110.799999999985),
+    ("logf", "copiftv2", 4, 2, 608, 912, 16184.799999999977),
+    ("histf", "copiftv2", 4, 1, 350, 464, 9228.8),
+]
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("kernel,policy,depth,lat,cycles,instrs,energy",
+                         GOLDEN, ids=[f"{g[0]}-{g[1]}-d{g[2]}l{g[3]}"
+                                      for g in GOLDEN])
+def test_golden_trace(kernel, policy, depth, lat, cycles, instrs, energy):
+    rec = run_point(SweepPoint(kernel=kernel, policy=policy, queue_depth=depth,
+                               queue_latency=lat, n_samples=64))
+    assert rec.ok, rec.detail
+    assert rec.cycles == cycles
+    assert rec.instrs_int + rec.instrs_fp == instrs
+    assert rec.energy == pytest.approx(energy, rel=1e-12)
+    assert rec.ipc == pytest.approx(instrs / cycles, rel=1e-12)
+    assert rec.equivalent
+
+
+# ---------------------------------------------------------------------------
+# Monotonicity / bound properties of the design space
+# ---------------------------------------------------------------------------
+
+DEPTHS = (1, 2, 4, 8)
+
+
+def _v2_at_depth(kernel, depth, n=64):
+    return run_point(SweepPoint(kernel=kernel, policy="copiftv2",
+                                queue_depth=depth, n_samples=n))
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_ipc_monotone_in_queue_depth(kernel):
+    """Widening the hardware FIFOs never hurts: IPC is non-decreasing (and
+    cycles non-increasing) as queue depth grows."""
+    recs = [_v2_at_depth(kernel, d) for d in DEPTHS]
+    for shallow, deep in zip(recs, recs[1:]):
+        assert deep.cycles <= shallow.cycles, kernel
+        assert deep.ipc >= shallow.ipc - 1e-12, kernel
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_dual_issue_ipc_bounds(kernel):
+    """Dual-issue IPC >= single-issue IPC on every kernel, and every policy
+    respects the structural issue-width bounds (<=1 single, <=2 dual)."""
+    base = run_point(SweepPoint(kernel=kernel, policy="baseline"))
+    v2 = run_point(SweepPoint(kernel=kernel, policy="copiftv2"))
+    assert base.ipc <= 1.0 + 1e-9
+    assert v2.ipc <= 2.0 + 1e-9
+    assert v2.ipc >= base.ipc - 1e-12, kernel
+
+
+@pytest.mark.tier1
+def test_stall_breakdown_accounts_idle_cycles():
+    """The stepper attributes stall causes; a depth-1 queue must surface
+    queue-full/empty pressure that depth 8 relieves."""
+    shallow = _v2_at_depth("expf", 1)
+    deep = _v2_at_depth("expf", 8)
+    q_shallow = sum(v for k, v in shallow.stalls.items() if "queue" in k)
+    q_deep = sum(v for k, v in deep.stalls.items() if "queue" in k)
+    assert q_shallow > q_deep
+    assert all(v >= 0 for v in shallow.stalls.values())
+
+
+# ---------------------------------------------------------------------------
+# Property tests over randomly sampled sweep configurations (no hypothesis
+# needed: a seeded stdlib PRNG draws the configurations)
+# ---------------------------------------------------------------------------
+
+def _sample_points(n, seed):
+    rng = random.Random(seed)
+    kernels = sorted(KERNELS)
+    return [SweepPoint(kernel=rng.choice(kernels),
+                       policy=rng.choice([p.value for p in P]),
+                       queue_depth=rng.choice(DEPTHS),
+                       queue_latency=rng.choice((1, 2, 4)),
+                       unroll=rng.choice((2, 4, 8)),
+                       n_samples=32)
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_configs_equivalent_to_baseline_interpreter(seed):
+    """Every sampled configuration that lowers must compute bit-identical
+    outputs to the sequential interpreter — the sweep as semantics fuzzer."""
+    for rec in map(run_point, _sample_points(8, seed)):
+        assert rec.status in ("ok", "rejected"), rec
+        if rec.ok:
+            assert rec.equivalent, rec
+            assert rec.fifo_violations == 0, rec
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_fifo_discipline_push_order_equals_pop_order(seed):
+    """Per queue, the runtime push sequence equals the pop sequence exactly:
+    both queues fully drain and values arrive in FIFO order."""
+    rng = random.Random(seed)
+    for _ in range(4):
+        kernel = rng.choice(sorted(KERNELS))
+        depth = rng.choice(DEPTHS)
+        tc = TransformConfig(n_samples=32, queue_depth=depth,
+                             unroll=rng.choice((4, 8)))
+        prog = lower(KERNELS[kernel], P.COPIFTV2, tc)
+        res = simulate(prog, MachineConfig(queue_depth=depth))
+        for q, pushed in res.push_seq.items():
+            assert pushed == res.pop_seq[q], (kernel, depth, q)
+        assert not res.fifo_violations
+
+
+@pytest.mark.tier1
+def test_stepper_is_reentrant_and_resumable():
+    """Two interleaved Stepper instances must not interfere, and manual
+    stepping must reach the same result as one-shot simulate()."""
+    tc = TransformConfig(n_samples=16)
+    mk = lambda: lower(KERNELS["expf"], P.COPIFTV2, tc)  # noqa: E731
+    a, b = Stepper(mk(), MachineConfig()), Stepper(mk(), MachineConfig())
+    while a.step() | b.step():      # non-short-circuit: advance both
+        pass
+    ra, rb = a.result(), b.result()
+    ref = simulate(mk(), MachineConfig())
+    for r in (ra, rb):
+        assert r.cycles == ref.cycles
+        assert r.energy == pytest.approx(ref.energy, rel=1e-12)
+        assert r.instrs == ref.instrs
+
+
+# ---------------------------------------------------------------------------
+# Sweep engine + Pareto laws
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_grid_enumerates_cartesian_product():
+    pts = grid(kernels=["expf", "logf"], queue_depths=(2, 4),
+               queue_latencies=(1, 2), unrolls=(4, 8), n_samples=16)
+    assert len(pts) == 2 * 3 * 2 * 2 * 2
+    assert len(set(pts)) == len(pts)          # hashable + unique
+    with pytest.raises(KeyError):
+        grid(kernels=["nope"])
+
+
+def test_run_sweep_serial_matches_parallel():
+    pts = grid(kernels=["dequant_dot"], queue_depths=(2, 4), n_samples=32)
+    serial = run_sweep(pts, workers=1)
+    parallel = run_sweep(pts, workers=2)
+    assert serial == parallel
+
+
+def test_pareto_front_is_nondominated_and_complete():
+    pts = grid(kernels=["expf"], queue_depths=DEPTHS, queue_latencies=(1, 2),
+               n_samples=32)
+    recs = run_sweep(pts, workers=1)
+    front = pareto_front(recs)
+    assert front, "front must be non-empty"
+    for f in front:                          # no front member dominates another
+        assert not any(dominates(g, f) for g in front)
+    for r in recs:                           # every off-front point is dominated
+        if r.ok and r not in front:
+            assert any(dominates(f, r) for f in front), r
+    # per-kernel partition covers the same records
+    assert pareto_by_kernel(recs)["expf"] == front
+
+
+def test_sweep_summary_and_csv(tmp_path):
+    recs = run_sweep(grid(kernels=["histf", "poly_lcg"], queue_depths=(2, 4),
+                          n_samples=16), workers=1)
+    s = sweep_summary(recs)
+    assert s["n_points"] == len(recs) == 12
+    assert s["n_ok"] == s["n_equivalent"] == 12
+    assert 0 < s["geomean_ipc_copiftv2"] <= 2.0
+    out = tmp_path / "sweep.csv"
+    assert write_csv(recs, str(out)) == 12
+    lines = out.read_text().strip().splitlines()
+    assert len(lines) == 13 and lines[0].startswith("kernel,policy,")
+
+
+@pytest.mark.slow
+def test_full_grid_sweep_all_equivalent():
+    """The full default exploration grid (288 configs): everything simulates
+    and matches the interpreter.  Slow; the tier-1 proxy is the sampled
+    fuzz above plus the benchmark smoke gate."""
+    recs = run_sweep(grid(queue_depths=DEPTHS, queue_latencies=(1, 2),
+                          unrolls=(4, 8), n_samples=32))
+    assert len(recs) == 288
+    assert all(r.ok and r.equivalent and not r.fifo_violations for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# CI smoke gate: benchmark sections must run without swallowing failures
+# ---------------------------------------------------------------------------
+
+def test_benchmarks_run_smoke():
+    env = {**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")}
+    res = subprocess.run([sys.executable, "-m", "benchmarks.run", "--smoke"],
+                         cwd=ROOT, env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert "dse_peak_ipc" in res.stdout
+    assert "claims_peak_ipc_v2" in res.stdout
