@@ -18,19 +18,23 @@ def main(argv=None) -> None:
 
     if args.smoke:
         # deliberately no try/except: a smoke failure must fail the run
-        from . import dse, fig3
+        from . import dse, fig3, sweep_perf
         for title, fn in [
             ("fig3 smoke (machine model, small n)", fig3.smoke),
             ("dse smoke (tiny sweep grid + equivalence fuzz)", dse.smoke),
+            ("sweep_perf smoke (event vs cycle engine throughput)",
+             sweep_perf.smoke),
         ]:
             print(f"# --- {title} ---")
             fn()
         return
 
-    from . import collective_policy, dse, fig3, kernel_bench, roofline_table
+    from . import (collective_policy, dse, fig3, kernel_bench,
+                   roofline_table, sweep_perf)
     sections = [
         ("fig3 (paper Fig.3a/b/c via the machine model)", fig3),
         ("dse (design-space sweep + Pareto fronts)", dse),
+        ("sweep_perf (DSE points/sec, event vs cycle engine)", sweep_perf),
         ("kernels (interpret-mode micro-bench)", kernel_bench),
         ("collective policy (bulk vs ring)", collective_policy),
         ("roofline (from dry-run artifacts)", roofline_table),

@@ -15,6 +15,13 @@ Usage (defaults sweep 288 configurations: 6 kernels x 3 policies x
         --depths 1,2,4,8,16 --latencies 1,2,4 --unrolls 4,8 \
         --n-samples 64 --workers 2 --out-dir artifacts/dse
 
+``--engine`` picks the simulation core: ``event`` (default) is the
+event-driven time-skip engine — bit-identical to ``cycle`` (the naive
+per-cycle reference stepper) but skips fully-stalled stretches, so big
+high-latency grids finish in host time O(instructions) rather than
+O(cycles).  A timing report (wall time, points/sec, ms/config) prints either
+way; ``--engine cycle`` exists for differential checking and benchmarking.
+
 Outputs ``sweep.csv`` (every record) and ``pareto.csv`` (front members only)
 under ``--out-dir``; exits non-zero if any configuration fails the
 equivalence check or deadlocks.
@@ -26,12 +33,19 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (KERNELS, ExecutionPolicy, format_front, grid,
-                        pareto_by_kernel, run_sweep, sweep_summary, write_csv)
+from repro.core import (ENGINES, KERNELS, ExecutionPolicy, format_front,
+                        grid, pareto_by_kernel, resolve_workers, run_sweep,
+                        sweep_summary, write_csv)
 
 
 def _ints(s):
     return tuple(int(x) for x in s.split(",") if x)
+
+
+def _opt_ints(s):
+    """Comma list where '-' (or 'none') means the symmetric default."""
+    return tuple(None if x in ("-", "none") else int(x)
+                 for x in s.split(",") if x)
 
 
 def main(argv=None) -> int:
@@ -46,9 +60,18 @@ def main(argv=None) -> int:
                     help="queue visibility latencies to sweep")
     ap.add_argument("--unrolls", type=_ints, default=(4, 8),
                     help="schedule interleave factors to sweep")
+    ap.add_argument("--depths-i2f", type=_opt_ints, default=(None,),
+                    help="asymmetric I2F depth overrides (comma list; "
+                         "'-' = symmetric)")
+    ap.add_argument("--depths-f2i", type=_opt_ints, default=(None,),
+                    help="asymmetric F2I depth overrides (comma list; "
+                         "'-' = symmetric)")
     ap.add_argument("--n-samples", type=int, default=32)
     ap.add_argument("--workers", type=int, default=None,
                     help="process-pool width (0/1 = serial)")
+    ap.add_argument("--engine", choices=ENGINES, default="event",
+                    help="simulation core: event-driven time-skip (default) "
+                         "or the naive per-cycle reference")
     ap.add_argument("--out-dir", default=os.path.join("artifacts", "dse"))
     args = ap.parse_args(argv)
 
@@ -57,18 +80,23 @@ def main(argv=None) -> int:
                 if args.policies else None)
     pts = grid(kernels=kernels, policies=policies, queue_depths=args.depths,
                queue_latencies=args.latencies, unrolls=args.unrolls,
-               n_samples=args.n_samples)
+               n_samples=args.n_samples, engine=args.engine,
+               i2f_depths=args.depths_i2f, f2i_depths=args.depths_f2i)
     if not pts:
         ap.error("empty sweep grid: every axis needs at least one value")
+    workers = resolve_workers(len(pts), args.workers)
     print(f"sweeping {len(pts)} configurations "
           f"({len(kernels) if kernels else len(KERNELS)} kernels x "
           f"{len(policies) if policies else len(ExecutionPolicy)} policies x "
           f"{len(args.depths)} depths x {len(args.latencies)} latencies x "
-          f"{len(args.unrolls)} unrolls; n_samples={args.n_samples}) ...")
+          f"{len(args.unrolls)} unrolls; n_samples={args.n_samples}) "
+          f"[engine={args.engine}, workers={workers}] ...")
     t0 = time.time()
     recs = run_sweep(pts, workers=args.workers)
     dt = time.time() - t0
-    print(f"done in {dt:.1f}s ({dt / len(recs) * 1e3:.1f} ms/config)\n")
+    print(f"== timing ==\n  engine: {args.engine}\n  wall: {dt:.2f}s"
+          f"\n  points/sec: {len(recs) / dt:.1f}"
+          f"\n  ms/config: {dt / len(recs) * 1e3:.1f}\n")
 
     fronts = pareto_by_kernel(recs)
     for kernel, front in fronts.items():

@@ -6,26 +6,29 @@ dual-stream idea through the TPU layers of the framework."""
 from .bench_kernels import KERNELS
 from .dfg import LoopDFG, Node, s
 from .isa import Instr, OpKind, Queue, Unit
-from .machine import (DeadlockError, MachineConfig, Program, SimResult,
-                      Stepper, simulate)
+from .machine import (ENGINES, DeadlockError, MachineConfig, Program,
+                      ReferenceStepper, SimResult, Stepper, simulate,
+                      stepper_for)
 from .metrics import (PAPER_CLAIMS, KernelComparison, best, geomean,
                       group_by, run_suite, summarize)
 from .pareto import (dominates, format_front, pareto_by_kernel, pareto_front,
                      write_csv)
 from .policy import ExecutionPolicy
-from .sweep import (CSV_FIELDS, SweepPoint, SweepRecord, grid, run_point,
+from .sweep import (CSV_FIELDS, SweepPoint, SweepRecord, clear_worker_caches,
+                    grid, partition_points, resolve_workers, run_point,
                     run_sweep, sweep_summary)
 from .transform import TransformConfig, analyze, lower
 
 __all__ = [
     "KERNELS", "LoopDFG", "Node", "s", "Instr", "OpKind", "Queue", "Unit",
-    "DeadlockError", "MachineConfig", "Program", "SimResult", "Stepper",
-    "simulate",
+    "DeadlockError", "ENGINES", "MachineConfig", "Program",
+    "ReferenceStepper", "SimResult", "Stepper", "simulate", "stepper_for",
     "PAPER_CLAIMS", "KernelComparison", "best", "geomean",
     "group_by", "run_suite", "summarize",
     "dominates", "format_front", "pareto_by_kernel", "pareto_front",
     "write_csv",
     "ExecutionPolicy", "TransformConfig", "analyze", "lower",
-    "CSV_FIELDS", "SweepPoint", "SweepRecord", "grid", "run_point",
-    "run_sweep", "sweep_summary",
+    "CSV_FIELDS", "SweepPoint", "SweepRecord", "clear_worker_caches", "grid",
+    "partition_points", "resolve_workers", "run_point", "run_sweep",
+    "sweep_summary",
 ]

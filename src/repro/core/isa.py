@@ -14,6 +14,7 @@ and whether it blocks its unit (non-pipelined, e.g. fdiv/fsqrt).
 from __future__ import annotations
 
 import enum
+import functools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Tuple
 
@@ -104,6 +105,30 @@ class Queue(enum.Enum):
     F2I = "f2i"
 
 
+#: pre-interned per-unit stall-counter keys (``"<unit>_<cause>"``), so the
+#: simulator hot path never string-formats; causes mirror
+#: ``machine.STALL_CAUSES`` plus the unit-busy check.
+_STALL_KEYS = {
+    u.value: {c: f"{u.value}_{c}"
+              for c in ("busy", "dep", "queue_empty", "queue_full")}
+    for u in Unit
+}
+
+#: dense indices for the hot-path list layouts (enum-keyed dicts hash the
+#: member on every access; a list index does not)
+UNIT_INDEX = {u: i for i, u in enumerate(Unit)}
+QUEUE_INDEX = {q: i for i, q in enumerate(Queue)}
+
+#: (busy, dep, queue_empty, queue_full) stall keys per unit, pre-unpacked
+#: for the exec_facts builder
+_HOT_KEYS = {
+    u: (_STALL_KEYS[u.value]["busy"], _STALL_KEYS[u.value]["dep"],
+        _STALL_KEYS[u.value]["queue_empty"],
+        _STALL_KEYS[u.value]["queue_full"])
+    for u in Unit
+}
+
+
 @dataclass(frozen=True)
 class Instr:
     """One concrete instruction instance in a lowered stream program.
@@ -129,21 +154,113 @@ class Instr:
     fn: Optional[Callable[..., Any]] = None
     extra_energy: float = 0.0             # e.g. SSR stream read on behalf
 
-    @property
+    # cached: Instr is immutable and these are hammered by both the list
+    # schedulers (transform._interleave) and the simulator issue loop
+    @functools.cached_property
     def spec(self) -> OpSpec:
         return OP_TABLE[self.kind]
 
-    @property
+    @functools.cached_property
     def unit(self) -> Unit:
         return self.spec.unit
 
-    @property
+    @functools.cached_property
     def pops(self) -> Tuple[Queue, ...]:
         return tuple(s for s in self.srcs if isinstance(s, Queue))
 
-    @property
+    @functools.cached_property
     def reg_srcs(self) -> Tuple[str, ...]:
         return tuple(s for s in self.srcs if isinstance(s, str))
+
+    @functools.cached_property
+    def issue_plan(self) -> Tuple[Tuple[str, object, int], ...]:
+        """Issue conditions in machine-check order, pre-resolved once.
+
+        Each entry is ``(check, operand, k)``:
+
+        * ``("queue_empty", queue, k)`` — this operand pops the ``k``-th
+          pending entry of ``queue`` (k counts this instruction's earlier pops
+          of the same queue); blocked until that entry is *visible*, i.e. its
+          queue timestamp (producer completion + queue latency) has passed.
+        * ``("dep", name, 0)`` — register operand; blocked until the
+          producer's result latency has elapsed (``ready[name]``).
+        * ``("queue_full", queue, k)`` — this push needs the queue's
+          occupancy (in-flight included) to be at most ``depth - k - 1``;
+          cleared only by a consumer pop, never by time alone.
+
+        The event-driven stepper turns each entry into a clear-time and
+        time-skips to the earliest cycle every condition holds; the order here
+        matches ``ReferenceStepper._block_reason`` so bulk stall attribution
+        is bit-identical to per-cycle attribution.  (The unit-busy check is
+        state-only and is prepended by the stepper.)
+        """
+        plan = []
+        need: dict = {}
+        for src in self.srcs:
+            if isinstance(src, Queue):
+                k = need.get(src, 0)
+                plan.append(("queue_empty", src, k))
+                need[src] = k + 1
+            else:
+                plan.append(("dep", src, 0))
+        room: dict = {}
+        for q in self.pushes:
+            k = room.get(q, 0)
+            plan.append(("queue_full", q, k))
+            room[q] = k + 1
+        return tuple(plan)
+
+    @functools.cached_property
+    def exec_facts(self) -> Tuple:
+        """Hot-path companion of :attr:`issue_plan`: every instruction-static
+        fact the simulator needs at issue time, resolved once per ``Instr``
+        and cached on the instance — so memoized programs re-simulated across
+        machine configs (``core.sweep``) never re-derive latencies, energies
+        or stall-counter keys.  Layout::
+
+            (unit, unit_value, latency, blocking,
+             energy_no_frep, energy_frep, busy_stall_key,
+             dst, fn, expects, label, pushed_value_name,
+             ops,    # per source operand, in semantic order:
+                     #   (is_queue, operand, k, stall_key, queue_value_str,
+                     #    queue_index)           (queue_index -1 for registers)
+             pushes, # per push: (queue, k, stall_key, queue_index)
+             unit_index)
+
+        ``ops``/``pushes`` are split out of :attr:`issue_plan` (same order,
+        same ``k`` bookkeeping), with the stall keys pre-formatted and
+        :data:`QUEUE_INDEX`/:data:`UNIT_INDEX` positions resolved for the
+        event engine's list-indexed hot state.
+        """
+        spec = OP_TABLE[self.kind]
+        unit = spec.unit
+        busy_key, dep_key, qe_key, qf_key = _HOT_KEYS[unit]
+        qindex = QUEUE_INDEX
+        ops = []
+        n_pop = 0
+        need: dict = {}
+        for src in self.srcs:                   # same walk as issue_plan
+            if type(src) is Queue:
+                k = need.get(src, 0)
+                need[src] = k + 1
+                n_pop += 1
+                ops.append((True, src, k, qe_key, src.value, qindex[src]))
+            else:
+                ops.append((False, src, 0, dep_key, None, -1))
+        pushes = []
+        room: dict = {}
+        for q in self.pushes:
+            k = room.get(q, 0)
+            room[q] = k + 1
+            pushes.append((q, k, qf_key, qindex[q]))
+        e = spec.energy + self.extra_energy
+        e += E_QUEUE_ACCESS * (len(pushes) + n_pop)
+        return (unit, unit.value, spec.latency, spec.blocking,
+                e + E_FETCH_INT,
+                e + (E_FETCH_INT if unit is Unit.INT else E_FETCH_FREP),
+                busy_key, self.dst, self.fn, self.expects, self.label,
+                self.push_val or self.label, tuple(ops), tuple(pushes),
+                UNIT_INDEX[unit])
 
     def energy(self, *, frep: bool) -> float:
         e = self.spec.energy + self.extra_energy

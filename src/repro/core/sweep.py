@@ -16,16 +16,28 @@ Sweep points are plain primitives (no lambdas, no Programs), so they pickle
 across process boundaries; :func:`run_sweep` fans the grid out over a process
 pool (the stepper is pure Python — processes, not threads, buy parallelism)
 and falls back to in-process execution when a pool is unavailable.
+
+Per-worker caching: a sweep redoes a lot of shared work if every point is
+treated as independent — ``lower()`` does not depend on ``queue_latency``
+(nor on ``queue_depth`` for queue-free policies), and the interpreter oracle
+``dfg.eval_reference`` depends only on ``(kernel, n_samples)``.  Both are
+memoized per process (:func:`_lower_cached` / :func:`_reference_cached`),
+and :func:`partition_points` hands each pool worker a contiguous, presized
+run of points sorted by lowering key so those memos actually hit.  Workers
+are sized by ``min(cpu, len(points))`` and can be pinned with the
+``REPRO_SWEEP_WORKERS`` environment variable (CI sets it to 1).
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import os
 from dataclasses import asdict, dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .bench_kernels import KERNELS
-from .machine import DeadlockError, MachineConfig, Stepper
+from .isa import Queue
+from .machine import DeadlockError, ENGINES, MachineConfig, stepper_for
 from .metrics import best, geomean, group_by
 from .policy import ExecutionPolicy
 from .transform import TransformConfig, lower
@@ -42,6 +54,17 @@ class SweepPoint:
     unroll: int = 8
     unroll_int: Optional[int] = None
     n_samples: int = 64
+    engine: str = "event"            # machine.ENGINES: "event" | "cycle"
+    #: asymmetric FIFO geometry: per-queue depth overrides (None => the
+    #: symmetric ``queue_depth``).  The lowering targets the tighter queue
+    #: (min effective depth), which keeps the no-deadlock schedule guarantee
+    #: on the looser one.
+    queue_depth_i2f: Optional[int] = None
+    queue_depth_f2i: Optional[int] = None
+
+    def effective_depths(self) -> Tuple[int, int]:
+        return (self.queue_depth_i2f or self.queue_depth,
+                self.queue_depth_f2i or self.queue_depth)
 
 
 @dataclass
@@ -68,6 +91,9 @@ class SweepRecord:
     max_occ_f2i: int = 0
     fifo_violations: int = 0
     equivalent: bool = False         # outputs bit-identical to the interpreter
+    engine: str = "event"
+    queue_depth_i2f: Optional[int] = None
+    queue_depth_f2i: Optional[int] = None
     stalls: Dict[str, int] = field(default_factory=dict)
 
     @property
@@ -80,7 +106,8 @@ CSV_FIELDS: Tuple[str, ...] = (
     "kernel", "policy", "queue_depth", "queue_latency", "unroll", "unroll_int",
     "n_samples", "status", "cycles", "ipc", "energy", "power", "throughput",
     "efficiency", "instrs_int", "instrs_fp", "max_occ_i2f", "max_occ_f2i",
-    "fifo_violations", "equivalent", "stalls", "detail",
+    "fifo_violations", "equivalent", "engine", "queue_depth_i2f",
+    "queue_depth_f2i", "stalls", "detail",
 )
 
 
@@ -90,49 +117,121 @@ def grid(kernels: Optional[Sequence[str]] = None,
          queue_latencies: Sequence[int] = (1,),
          unrolls: Sequence[int] = (8,),
          unroll_ints: Sequence[Optional[int]] = (None,),
-         n_samples: int = 64) -> List[SweepPoint]:
-    """Enumerate the cartesian configuration grid as sweep points."""
+         n_samples: int = 64,
+         engine: str = "event",
+         i2f_depths: Sequence[Optional[int]] = (None,),
+         f2i_depths: Sequence[Optional[int]] = (None,)) -> List[SweepPoint]:
+    """Enumerate the cartesian configuration grid as sweep points.
+
+    ``i2f_depths``/``f2i_depths`` add asymmetric FIFO geometries: each non-
+    None value overrides that queue's depth while ``queue_depths`` keeps
+    supplying the symmetric base (and the other queue's depth)."""
     ks = list(kernels) if kernels else sorted(KERNELS)
     ps = list(policies) if policies else list(ExecutionPolicy)
     unknown = [k for k in ks if k not in KERNELS]
     if unknown:
         raise KeyError(f"unknown kernels: {unknown} (have {sorted(KERNELS)})")
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (have {ENGINES})")
     return [
         SweepPoint(kernel=k, policy=ExecutionPolicy.parse(p).value,
                    queue_depth=d, queue_latency=lat, unroll=u, unroll_int=ui,
-                   n_samples=n_samples)
-        for k, p, d, lat, u, ui in itertools.product(
-            ks, ps, queue_depths, queue_latencies, unrolls, unroll_ints)
+                   n_samples=n_samples, engine=engine,
+                   queue_depth_i2f=di, queue_depth_f2i=df)
+        for k, p, d, lat, u, ui, di, df in itertools.product(
+            ks, ps, queue_depths, queue_latencies, unrolls, unroll_ints,
+            i2f_depths, f2i_depths)
     ]
 
 
-def run_point(pt: SweepPoint) -> SweepRecord:
+# -- per-worker memos --------------------------------------------------------
+# Both caches are process-local (each pool worker owns one) and keyed purely
+# on primitives, so cache state never crosses a pickle boundary.  Cached
+# values are treated as immutable by every consumer: steppers copy
+# ``init_env`` and never touch a Program's streams, and the interpreter
+# reference is only compared against, never written.
+
+def _tcfg_for(pt: SweepPoint) -> TransformConfig:
+    # the schedule targets the tighter FIFO of an asymmetric pair: the
+    # replay gate's no-deadlock guarantee then holds a fortiori on the
+    # looser queue
+    return TransformConfig(unroll=pt.unroll, unroll_int=pt.unroll_int,
+                           batch=min(32, pt.n_samples),
+                           queue_depth=min(pt.effective_depths()),
+                           n_samples=pt.n_samples)
+
+
+def _lower_key(pt: SweepPoint) -> Tuple:
+    """The transform-relevant fields of a point (see
+    ``TransformConfig.lowering_key``): ``queue_latency`` never matters, and
+    ``queue_depth`` only matters for depth-sensitive policies."""
+    policy = ExecutionPolicy.parse(pt.policy)
+    return (pt.kernel,) + _tcfg_for(pt).lowering_key(policy)
+
+
+@functools.lru_cache(maxsize=64)
+def _lower_cached(kernel: str, policy_value: str, tcfg: TransformConfig):
+    """Memoized ``lower()``; raises ValueError exactly like the uncached
+    call (lru_cache does not cache exceptions, but rejection is cheap)."""
+    return lower(KERNELS[kernel], ExecutionPolicy.parse(policy_value), tcfg)
+
+
+@functools.lru_cache(maxsize=64)
+def _reference_cached(kernel: str, n_samples: int):
+    """Memoized sequential-interpreter oracle for equivalence checks."""
+    return KERNELS[kernel].eval_reference(n_samples)
+
+
+def clear_worker_caches() -> None:
+    """Drop this process's lowering/reference memos (benchmark hygiene)."""
+    from . import transform
+    _lower_cached.cache_clear()
+    _reference_cached.cache_clear()
+    transform._V2_PREFIX_CACHE.clear()
+
+
+def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
     """Lower + simulate one configuration and check baseline equivalence.
 
     Never raises for model-level outcomes: infeasible schedules come back as
     ``status="rejected"`` and runtime deadlocks as ``status="deadlock"`` so a
-    sweep always yields one record per point.
+    sweep always yields one record per point.  ``use_caches=False`` bypasses
+    the per-worker memos (the pre-caching pipeline, kept for benchmarking).
     """
     dfg = KERNELS[pt.kernel]
     policy = ExecutionPolicy.parse(pt.policy)
     base = dict(kernel=pt.kernel, policy=policy.value,
                 queue_depth=pt.queue_depth, queue_latency=pt.queue_latency,
                 unroll=pt.unroll, unroll_int=pt.unroll_int,
-                n_samples=pt.n_samples)
-    tcfg = TransformConfig(unroll=pt.unroll, unroll_int=pt.unroll_int,
-                           batch=min(32, pt.n_samples),
-                           queue_depth=pt.queue_depth, n_samples=pt.n_samples)
+                n_samples=pt.n_samples, engine=pt.engine,
+                queue_depth_i2f=pt.queue_depth_i2f,
+                queue_depth_f2i=pt.queue_depth_f2i)
+    tcfg = _tcfg_for(pt)
+    if policy not in TransformConfig.DEPTH_SENSITIVE_POLICIES:
+        # depth is not transform-relevant here: normalize it out of the memo
+        # key so one lowering serves the whole depth axis
+        tcfg = TransformConfig(unroll=tcfg.unroll, unroll_int=tcfg.unroll_int,
+                               batch=tcfg.batch, n_samples=tcfg.n_samples)
+    d_i2f, d_f2i = pt.effective_depths()
     mcfg = MachineConfig(queue_depth=pt.queue_depth,
-                         queue_latency=pt.queue_latency)
+                         queue_latency=pt.queue_latency,
+                         queue_depths=({Queue.I2F: d_i2f, Queue.F2I: d_f2i}
+                                       if (pt.queue_depth_i2f is not None or
+                                           pt.queue_depth_f2i is not None)
+                                       else None))
     try:
-        prog = lower(dfg, policy, tcfg)
+        if use_caches:
+            prog = _lower_cached(pt.kernel, policy.value, tcfg)
+        else:
+            prog = lower(dfg, policy, tcfg, use_prefix_cache=False)
     except ValueError as e:
         return SweepRecord(**base, status="rejected", detail=str(e))
     try:
-        res = Stepper(prog, mcfg).run()
+        res = stepper_for(prog, mcfg, pt.engine).run()
     except DeadlockError as e:
         return SweepRecord(**base, status="deadlock", detail=str(e))
-    ref = dfg.eval_reference(pt.n_samples)
+    ref = (_reference_cached(pt.kernel, pt.n_samples) if use_caches
+           else dfg.eval_reference(pt.n_samples))
     equivalent = all(
         [res.env.get(f"{node.name}@{i}") for i in range(pt.n_samples)]
         == ref[node.name]
@@ -147,21 +246,77 @@ def run_point(pt: SweepPoint) -> SweepRecord:
         equivalent=equivalent, stalls=s["stalls"])
 
 
+def partition_points(points: Sequence[SweepPoint],
+                     workers: int) -> List[List[int]]:
+    """Presized, cache-friendly partition of ``points`` for a worker pool.
+
+    Returns at most ``workers`` lists of *input indices*.  Points sharing a
+    lowering key stay on one worker and adjacent keys stay adjacent (the
+    partition walks key groups in sorted order, cutting only at group
+    boundaries once a worker reaches its presized target), so each worker's
+    lowering/reference memos see runs of hits instead of a random shuffle.
+    """
+    if workers <= 0:
+        raise ValueError("workers must be positive")
+    groups: Dict[Tuple, List[int]] = {}
+    for i, pt in enumerate(points):
+        groups.setdefault(_lower_key(pt), []).append(i)
+    target = -(-len(points) // workers)          # ceil division
+    parts: List[List[int]] = [[]]
+
+    def sortable(kv):                # lowering keys mix None with ints
+        return tuple((v is None, 0 if v is None else v) for v in kv[0])
+
+    for _key, idxs in sorted(groups.items(), key=sortable):
+        if len(parts[-1]) >= target and len(parts) < workers:
+            parts.append([])
+        parts[-1].extend(idxs)
+    return parts
+
+
+def _run_indexed(pairs: List[Tuple[int, SweepPoint]]
+                 ) -> List[Tuple[int, SweepRecord]]:
+    """Pool-worker entry: run a batch in partition order, tagging each record
+    with its input index so the caller can restore input order."""
+    return [(i, run_point(pt)) for i, pt in pairs]
+
+
+def resolve_workers(n_points: int, workers: Optional[int] = None) -> int:
+    """Pool width: explicit ``workers`` wins, then the ``REPRO_SWEEP_WORKERS``
+    environment override (CI pins it to 1), then ``min(cpu, n_points)`` —
+    small sweeps no longer degrade to serial on many-core hosts."""
+    if workers is None:
+        env = os.environ.get("REPRO_SWEEP_WORKERS", "").strip()
+        if env:
+            workers = int(env)
+    if workers is None:
+        workers = min(os.cpu_count() or 1, n_points)
+    return max(1, workers)
+
+
 def run_sweep(points: Sequence[SweepPoint],
               workers: Optional[int] = None) -> List[SweepRecord]:
-    """Run every point, in input order.  ``workers=None`` auto-sizes a
-    process pool to the machine; ``workers<=1`` forces in-process execution.
-    Pool startup failures (restricted sandboxes) degrade to serial."""
+    """Run every point, returning records in input order.  ``workers=None``
+    auto-sizes a process pool (see :func:`resolve_workers`); ``workers<=1``
+    forces in-process execution.  Pool startup failures (restricted
+    sandboxes) degrade to serial.  Points are fanned out with
+    :func:`partition_points`, so each worker sees a cache-friendly run."""
     points = list(points)
-    if workers is None:
-        workers = min(os.cpu_count() or 1, max(1, len(points) // 8))
+    workers = resolve_workers(len(points), workers)
     if workers > 1 and len(points) > 1:
         try:
             from concurrent.futures import ProcessPoolExecutor
             from concurrent.futures.process import BrokenProcessPool
-            chunk = max(1, len(points) // (workers * 4))
-            with ProcessPoolExecutor(max_workers=workers) as pool:
-                return list(pool.map(run_point, points, chunksize=chunk))
+            parts = [p for p in partition_points(points, workers) if p]
+            out: List[Optional[SweepRecord]] = [None] * len(points)
+            with ProcessPoolExecutor(max_workers=len(parts)) as pool:
+                futs = [pool.submit(_run_indexed,
+                                    [(i, points[i]) for i in part])
+                        for part in parts]
+                for fut in futs:
+                    for i, rec in fut.result():
+                        out[i] = rec
+                return list(out)     # type: ignore[arg-type]
         except (ImportError, OSError, PermissionError, BrokenProcessPool):
             pass                     # no usable pool: run in-process below
     return [run_point(pt) for pt in points]

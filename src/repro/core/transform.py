@@ -33,6 +33,7 @@ reorders movable shims to satisfy it and the tests verify it value-by-value.
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -43,8 +44,13 @@ from .machine import Program
 from .policy import ExecutionPolicy
 
 
-@dataclass
+@dataclass(frozen=True)
 class TransformConfig:
+    """Lowering parameters.  Frozen (hashable) on purpose: a TransformConfig
+    is the memo key for ``core.sweep``'s per-worker lowering cache, so two
+    sweep points whose transform-relevant fields agree share one lowered
+    Program.  Note there is no ``queue_latency`` here — visibility latency is
+    a :class:`~.machine.MachineConfig` property the schedule never sees."""
     unroll: int = 8          # Step 3: samples interleaved in the schedule
     unroll_int: Optional[int] = None   # COPIFTv2 integer-stream interleave
     #   (defaults to ``unroll``; the int stream is scheduled *against* the
@@ -53,6 +59,20 @@ class TransformConfig:
     sync_cost: int = 2       # COPIFT: int-core instrs to config/launch a phase
     queue_depth: int = 8     # hardware FIFO depth the schedule targets
     n_samples: int = 512
+
+    #: policies whose lowering actually reads ``queue_depth`` (the COPIFTv2
+    #: cross-stream replay gate).  BASELINE has no queues and COPIFT spills
+    #: through memory, so for those the depth axis can be normalized out of
+    #: the memo key — one lowering serves every swept depth.
+    DEPTH_SENSITIVE_POLICIES = frozenset({ExecutionPolicy.COPIFTV2})
+
+    def lowering_key(self, policy: ExecutionPolicy) -> Tuple:
+        """Hashable memo key: every field the ``lower()`` output depends on
+        under ``policy``."""
+        depth = (self.queue_depth
+                 if policy in self.DEPTH_SENSITIVE_POLICIES else None)
+        return (policy.value, self.unroll, self.unroll_int, self.batch,
+                self.sync_cost, depth, self.n_samples)
 
 
 def vid(name: str, i: int) -> str:
@@ -169,11 +189,19 @@ class CrossSchedule:
     fixed, stream (COPIFTv2).  ``fixed`` is replayed lazily against real
     queue-occupancy counters, so the scheduled stream only emits a queue
     operation when the joint in-order execution can actually reach it —
-    the structural no-deadlock condition, *including finite queue depth*."""
+    the structural no-deadlock condition, *including finite queue depth*.
+
+    ``depth_gate_hit`` records whether the finite-depth comparison ever
+    constrained the schedule.  When it stays False the produced schedule is
+    provably identical for every larger ``queue_depth`` (raising the depth
+    only relaxes the two gate comparisons), which is what lets the sweep
+    layer reuse one lowered Program across the saturated tail of a depth
+    axis."""
     fixed: List[Instr]
     queue_depth: int
     push_order: Dict[Queue, "deque"]    # values this stream must push, FIFO
     pop_order: Dict[Queue, "deque"]     # values this stream will pop, FIFO
+    depth_gate_hit: bool = False
 
 
 def _interleave(per_sample: List[List[Instr]], U: int, b: _Builder,
@@ -218,6 +246,7 @@ def _interleave(per_sample: List[List[Instr]], U: int, b: _Builder,
                 room[q] = room.get(q, 0) + 1
             if any(fx_push[q] - my_pop[q] + k > cross.queue_depth
                    for q, k in room.items()):
+                cross.depth_gate_hit = True
                 break
             for q in ins.pops:
                 fx_pop[q] += 1
@@ -234,6 +263,7 @@ def _interleave(per_sample: List[List[Instr]], U: int, b: _Builder,
             if seq is not None and (not seq or seq[0] != ins.push_val):
                 return False
             if my_push[q] - fx_pop[q] >= cross.queue_depth:
+                cross.depth_gate_hit = True
                 return False
         pop_idx: Dict[Queue, int] = {}
         for idx, q in enumerate(ins.pops):
@@ -366,7 +396,35 @@ def lower_baseline(dfg: LoopDFG, cfg: TransformConfig) -> Program:
 # COPIFTv2  (Steps 1-5 of the paper)
 # ---------------------------------------------------------------------------
 
-def lower_copiftv2(dfg: LoopDFG, cfg: TransformConfig) -> Program:
+#: process-local cache of the depth-independent prefix of lower_copiftv2
+#: (partition, per-sample builds, the scheduled FP stream and its realized
+#: queue sequences).  Only the integer stream's joint schedule reads
+#: ``queue_depth`` (the CrossSchedule replay gate), so one prefix serves an
+#: entire swept depth axis.  Keyed by kernel name + the prefix-relevant
+#: config fields, with the LoopDFG identity checked on hit so ad-hoc test
+#: graphs reusing a name can never poison the cache.  Each entry is a
+#: mutable ``[dfg, prefix, saturation]`` record; ``saturation`` holds
+#: ``(depth, Program)`` for the shallowest depth whose integer schedule was
+#: built without the depth gate ever firing — that Program is provably what
+#: lowering would produce at *any* deeper queue, so the saturated tail of a
+#: depth axis shares one Program (and all its cached simulation facts).
+_V2_PREFIX_CACHE: Dict[Tuple, List] = {}
+_V2_PREFIX_CAP = 32
+
+
+def _v2_entry(dfg: LoopDFG, cfg: TransformConfig) -> List:
+    key = (dfg.name, cfg.unroll, cfg.unroll_int, cfg.n_samples)
+    hit = _V2_PREFIX_CACHE.get(key)
+    if hit is not None and hit[0] is dfg:
+        return hit
+    entry = [dfg, _lower_copiftv2_prefix(dfg, cfg), None]
+    if len(_V2_PREFIX_CACHE) >= _V2_PREFIX_CAP:
+        _V2_PREFIX_CACHE.pop(next(iter(_V2_PREFIX_CACHE)))
+    _V2_PREFIX_CACHE[key] = entry
+    return entry
+
+
+def _lower_copiftv2_prefix(dfg: LoopDFG, cfg: TransformConfig) -> Tuple:
     plan = analyze(dfg)
     b = _Builder()
     n, U = cfg.n_samples, cfg.unroll
@@ -532,7 +590,6 @@ def lower_copiftv2(dfg: LoopDFG, cfg: TransformConfig) -> Program:
     # the global push order equals the pop order on both queues, and every
     # integer queue op is deferred until the joint in-order execution can
     # actually reach it (replay gate: no deadlock, finite queue depth).
-    from collections import deque
     int_per_sample = len(int_samples[0]) + 2.0 / max(cfg.unroll_int or U, 1)
     fp_per_sample = float(len(fp_samples[0]))
     pushes_per_sample = sum(len(ins.pushes) for ins in int_samples[0])
@@ -574,16 +631,40 @@ def lower_copiftv2(dfg: LoopDFG, cfg: TransformConfig) -> Program:
 
         def int_pop_avail(i, k, _S=S2, _pos=f2i_pos):   # noqa: E731
             return _S * i + _pos[min(k, len(_pos) - 1)] + 4.0
-    int_stream = _interleave(
-        int_samples, ui, b, loop_overhead=True,
-        cross=CrossSchedule(fixed=fp_stream, queue_depth=cfg.queue_depth,
-                            push_order={Queue.I2F: i2f_pop_seq},
-                            pop_order={Queue.F2I: f2i_push_seq}),
-        pop_avail=int_pop_avail)
-    return Program(
+    return (b, init_env, outputs, n, int_samples, fp_stream,
+            tuple(i2f_pop_seq), tuple(f2i_push_seq), ui, int_pop_avail)
+
+
+def lower_copiftv2(dfg: LoopDFG, cfg: TransformConfig,
+                   use_prefix_cache: bool = True) -> Program:
+    """Depth-independent prefix (cached, see :func:`_v2_entry`) + the
+    per-depth joint schedule of the integer stream against the fixed FP
+    stream.  Programs lowered at different depths share the prefix's
+    immutable pieces (FP stream, per-sample instruction lists, init env),
+    and depths past the gate's saturation point share one Program outright."""
+    entry = _v2_entry(dfg, cfg) if use_prefix_cache else None
+    if entry is not None:
+        sat = entry[2]
+        if sat is not None and cfg.queue_depth >= sat[0]:
+            return sat[1]            # schedule provably identical up here
+        prefix = entry[1]
+    else:
+        prefix = _lower_copiftv2_prefix(dfg, cfg)
+    (b, init_env, outputs, n, int_samples, fp_stream,
+     i2f_pop_seq, f2i_push_seq, ui, int_pop_avail) = prefix
+    cross = CrossSchedule(fixed=fp_stream, queue_depth=cfg.queue_depth,
+                          push_order={Queue.I2F: deque(i2f_pop_seq)},
+                          pop_order={Queue.F2I: deque(f2i_push_seq)})
+    int_stream = _interleave(int_samples, ui, b, loop_overhead=True,
+                             cross=cross, pop_avail=int_pop_avail)
+    prog = Program(
         name=dfg.name, policy=ExecutionPolicy.COPIFTV2, mode="dual",
         streams={Unit.INT: int_stream, Unit.FP: fp_stream},
         n_samples=n, init_env=init_env, output_values=outputs, frep=True)
+    if entry is not None and not cross.depth_gate_hit:
+        if entry[2] is None or cfg.queue_depth < entry[2][0]:
+            entry[2] = (cfg.queue_depth, prog)
+    return prog
 
 
 def _sequence_by_events(int_list: List[Instr], events: List[Tuple[str, str]],
@@ -792,12 +873,15 @@ def _with_extra_deps(ins: Instr, extra: Tuple[str, ...]) -> Instr:
 # ---------------------------------------------------------------------------
 
 def lower(dfg: LoopDFG, policy: ExecutionPolicy,
-          cfg: Optional[TransformConfig] = None) -> Program:
+          cfg: Optional[TransformConfig] = None,
+          use_prefix_cache: bool = True) -> Program:
+    """Lower ``dfg`` under ``policy``.  ``use_prefix_cache=False`` bypasses
+    the COPIFTv2 depth-independent prefix memo (benchmark baselines)."""
     cfg = cfg or TransformConfig()
     if policy is ExecutionPolicy.BASELINE:
         return lower_baseline(dfg, cfg)
     if policy is ExecutionPolicy.COPIFT:
         return lower_copift(dfg, cfg)
     if policy is ExecutionPolicy.COPIFTV2:
-        return lower_copiftv2(dfg, cfg)
+        return lower_copiftv2(dfg, cfg, use_prefix_cache)
     raise ValueError(policy)

@@ -1,0 +1,215 @@
+"""Differential tests for the event-driven time-skip engine.
+
+The contract under test: :class:`repro.core.machine.Stepper` (event-driven,
+the default) is **bit-identical** to :class:`ReferenceStepper` (naive
+per-cycle) on every program — cycles, energy, stall breakdown, FIFO push/pop
+sequences, occupancy highwater, the functional environment, and deadlock
+behavior (same exception at the same cycle with the same stall state).
+
+Randomized configurations are drawn with ``hypothesis`` when available
+(via tests/_hypothesis_compat.py) and with a seeded stdlib PRNG otherwise,
+so the differential property always runs.
+"""
+import itertools
+import random
+import sys
+import os
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+
+from repro.core import (KERNELS, MachineConfig, Program, ReferenceStepper,
+                        Stepper, TransformConfig, lower, simulate,
+                        stepper_for)
+from repro.core.isa import Instr, OpKind, Queue, Unit
+from repro.core.policy import ExecutionPolicy as P
+
+#: every SimResult facet the two engines must agree on
+FACETS = ("cycles", "energy", "instrs", "stalls", "push_seq", "pop_seq",
+          "max_queue_occupancy", "fifo_violations", "env")
+
+
+def _assert_equal_runs(prog, mcfg):
+    ref = ReferenceStepper(prog, mcfg).run()
+    ev = Stepper(prog, mcfg).run()
+    for facet in FACETS:
+        assert getattr(ref, facet) == getattr(ev, facet), facet
+    return ref, ev
+
+
+def _check_config(kernel, policy, depth, lat, unroll, n):
+    tcfg = TransformConfig(n_samples=n, queue_depth=depth, unroll=unroll)
+    try:
+        prog = lower(KERNELS[kernel], policy, tcfg)
+    except ValueError:
+        return                        # infeasible schedule: nothing to diff
+    _assert_equal_runs(prog, MachineConfig(queue_depth=depth,
+                                           queue_latency=lat))
+
+
+# ---------------------------------------------------------------------------
+# Dense small grid (tier1) + randomized fuzz
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("policy", list(P), ids=[p.value for p in P])
+def test_event_engine_matches_reference_small_grid(policy):
+    for kernel, depth, lat in itertools.product(
+            ("expf", "box_muller", "histf"), (1, 4), (1, 8)):
+        _check_config(kernel, policy, depth, lat, 8, 16)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_event_engine_matches_reference_random_configs(seed):
+    """Seeded-PRNG differential fuzz across the whole configuration space."""
+    rng = random.Random(seed)
+    for _ in range(10):
+        _check_config(kernel=rng.choice(sorted(KERNELS)),
+                      policy=rng.choice(list(P)),
+                      depth=rng.choice((1, 2, 3, 4, 8, 16)),
+                      lat=rng.choice((1, 2, 3, 5, 8)),
+                      unroll=rng.choice((1, 2, 4, 8)),
+                      n=rng.choice((8, 16, 32)))
+
+
+@given(st.sampled_from(sorted(KERNELS)), st.sampled_from(list(P)),
+       st.integers(min_value=1, max_value=16),
+       st.integers(min_value=1, max_value=8),
+       st.sampled_from((1, 2, 4, 8)),
+       st.sampled_from((8, 16, 24)))
+@settings(max_examples=25, deadline=None)
+def test_event_engine_matches_reference_hypothesis(kernel, policy, depth,
+                                                   lat, unroll, n):
+    """Property form of the differential check (skips without hypothesis)."""
+    _check_config(kernel, policy, depth, lat, unroll, n)
+
+
+# ---------------------------------------------------------------------------
+# High-latency stretches: the configurations the time-skip exists for
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("lat", [8, 32])
+def test_event_engine_matches_reference_deep_stalls(lat):
+    tcfg = TransformConfig(n_samples=32, queue_depth=1)
+    prog = lower(KERNELS["box_muller"], P.COPIFTV2, tcfg)
+    _assert_equal_runs(prog, MachineConfig(queue_depth=1, queue_latency=lat))
+
+
+def test_event_engine_host_steps_are_sublinear_in_latency():
+    """The whole point of the engine: simulated cycles grow with queue
+    latency but host step() invocations stay ~O(instructions)."""
+    tcfg = TransformConfig(n_samples=32, queue_depth=1)
+    prog = lower(KERNELS["box_muller"], P.COPIFTV2, tcfg)
+
+    def host_steps(lat):
+        st_ = Stepper(prog, MachineConfig(queue_depth=1, queue_latency=lat))
+        steps = 0
+        while st_.step():
+            steps += 1
+        return steps, st_.result().cycles
+
+    steps_lo, cycles_lo = host_steps(2)
+    steps_hi, cycles_hi = host_steps(64)
+    assert cycles_hi > 2 * cycles_lo          # simulated time exploded
+    assert steps_hi < 1.2 * steps_lo          # host work did not
+
+
+# ---------------------------------------------------------------------------
+# Deadlock parity + degenerate programs
+# ---------------------------------------------------------------------------
+
+def _circular_wait_program():
+    """INT pops F2I before pushing I2F; FP pops I2F before pushing F2I."""
+    ins_i = Instr(uid=0, kind=OpKind.MV, label="i0", srcs=(Queue.F2I,),
+                  dst="a", pushes=(Queue.I2F,), push_val="a")
+    ins_f = Instr(uid=1, kind=OpKind.FADD, label="f0", srcs=(Queue.I2F,),
+                  dst="b", pushes=(Queue.F2I,), push_val="b")
+    return Program(name="dead", policy=P.COPIFTV2, mode="dual",
+                   streams={Unit.INT: [ins_i], Unit.FP: [ins_f]}, n_samples=1)
+
+
+@pytest.mark.tier1
+def test_deadlock_parity_same_cycle_same_message_same_stalls():
+    mcfg = MachineConfig(evaluate=False, deadlock_limit=300)
+    outcomes = []
+    for cls in (ReferenceStepper, Stepper):
+        stepper = cls(_circular_wait_program(), mcfg)
+        with pytest.raises(Exception) as exc:
+            stepper.run()
+        outcomes.append((str(exc.value), stepper.cycle, dict(stepper.stalls)))
+    assert outcomes[0] == outcomes[1]
+
+
+@pytest.mark.tier1
+def test_empty_program_yields_zero_rates_not_zero_division():
+    prog = Program(name="empty", policy=P.BASELINE, mode="single",
+                   streams={Unit.INT: []}, n_samples=0)
+    for engine in ("event", "cycle"):
+        res = simulate(prog, MachineConfig(), engine=engine)
+        assert res.cycles == 0
+        assert res.ipc == res.power == res.throughput == res.efficiency == 0.0
+
+
+@pytest.mark.tier1
+def test_stepper_for_selects_engine_and_rejects_unknown():
+    prog = lower(KERNELS["histf"], P.BASELINE, TransformConfig(n_samples=8))
+    assert isinstance(stepper_for(prog, engine="event"), Stepper)
+    cyc = stepper_for(prog, engine="cycle")
+    assert isinstance(cyc, ReferenceStepper) and not isinstance(cyc, Stepper)
+    with pytest.raises(ValueError):
+        stepper_for(prog, engine="warp")
+
+
+@pytest.mark.tier1
+def test_issue_plan_is_the_spec_for_exec_facts():
+    """``Instr.issue_plan`` documents the issue-condition order;
+    ``exec_facts`` is its packed hot-path twin.  They must never drift."""
+    prog = lower(KERNELS["expf"], P.COPIFTV2, TransformConfig(n_samples=8))
+    for lst in prog.streams.values():
+        for ins in lst:
+            plan_ops = [(c == "queue_empty", op, k)
+                        for c, op, k in ins.issue_plan if c != "queue_full"]
+            plan_pushes = [(op, k) for c, op, k in ins.issue_plan
+                           if c == "queue_full"]
+            facts = ins.exec_facts
+            assert [o[:3] for o in facts[12]] == plan_ops
+            assert [p[:2] for p in facts[13]] == plan_pushes
+
+
+@pytest.mark.tier1
+def test_skip_soundness_counts_init_env_overwrites():
+    """Regression: a register seeded in ``init_env`` and overwritten once by
+    the other unit has a non-final ready time — the per-unit skip must not
+    treat it as single-write.  (Found by review: the FP unit was skip-granted
+    past the overwrite and issued one cycle early.)"""
+    ints = [Instr(uid=i, kind=OpKind.IALU, label=f"c{i}",
+                  srcs=(f"c{i-1}",) if i else (), dst=f"c{i}")
+            for i in range(9)]
+    ints.append(Instr(uid=9, kind=OpKind.IMUL, label="x1", srcs=("c8",),
+                      dst="x"))
+    fps = [Instr(uid=10, kind=OpKind.FDIV, label="d", srcs=("a",), dst="d"),
+           Instr(uid=11, kind=OpKind.FADD, label="y", srcs=("x",), dst="y")]
+    prog = Program(name="initwrite", policy=P.COPIFTV2, mode="dual",
+                   streams={Unit.INT: ints, Unit.FP: fps}, n_samples=1,
+                   init_env={"a": 8.0, "x": 1.0})
+    _assert_equal_runs(prog, MachineConfig(evaluate=False))
+
+
+def test_event_stepper_resumable_and_interleavable():
+    """Manual stepping of two interleaved event steppers must match a
+    one-shot reference run (mid-run result() included)."""
+    tcfg = TransformConfig(n_samples=16)
+    mk = lambda: lower(KERNELS["expf"], P.COPIFTV2, tcfg)  # noqa: E731
+    a, b = Stepper(mk(), MachineConfig()), Stepper(mk(), MachineConfig())
+    for _ in range(50):                       # mid-run result() is safe
+        a.step()
+    assert a.result().instrs["int"] >= 0
+    while a.step() | b.step():                # non-short-circuit
+        pass
+    ref = ReferenceStepper(mk(), MachineConfig()).run()
+    for r in (a.result(), b.result()):
+        assert (r.cycles, r.instrs) == (ref.cycles, ref.instrs)
+        assert r.energy == pytest.approx(ref.energy, rel=1e-12)

@@ -3,6 +3,7 @@ cycle counts / IPC / energy at pinned design points, monotonicity properties
 of the queue geometry, FIFO-discipline and cross-policy equivalence properties
 over randomly sampled sweep configurations, Pareto-front laws, and the
 ``benchmarks.run --smoke`` CI gate."""
+import dataclasses
 import os
 import random
 import subprocess
@@ -11,10 +12,12 @@ import sys
 import pytest
 
 from repro.core import (KERNELS, MachineConfig, Stepper, SweepPoint,
-                        TransformConfig, dominates, grid, lower,
-                        pareto_by_kernel, pareto_front, run_point, run_sweep,
-                        simulate, sweep_summary, write_csv)
+                        TransformConfig, clear_worker_caches, dominates,
+                        grid, lower, pareto_by_kernel, pareto_front,
+                        partition_points, resolve_workers, run_point,
+                        run_sweep, simulate, sweep_summary, write_csv)
 from repro.core.policy import ExecutionPolicy as P
+from repro.core.sweep import _lower_key
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -39,6 +42,13 @@ GOLDEN = [
     ("logf", "baseline", 4, 1, 917, 912, 23110.799999999985),
     ("logf", "copiftv2", 4, 2, 608, 912, 16184.799999999977),
     ("histf", "copiftv2", 4, 1, 350, 464, 9228.8),
+    # high-latency points (the event engine's time-skip territory; values
+    # locked against the naive reference stepper)
+    ("expf", "copiftv2", 1, 8, 1269, 1232, 31129.99999999996),
+    ("box_muller", "copiftv2", 1, 4, 1377, 784, 33064.39999999998),
+    ("logf", "copiftv2", 2, 8, 729, 912, 18846.799999999977),
+    ("dequant_dot", "copift", 4, 8, 807, 984, 21323.799999999974),
+    ("poly_lcg", "baseline", 4, 8, 602, 592, 15291.199999999997),
 ]
 
 
@@ -227,6 +237,115 @@ def test_full_grid_sweep_all_equivalent():
 
 
 # ---------------------------------------------------------------------------
+# Worker sizing, grid partitioning, and the per-worker caches
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_resolve_workers_small_sweeps_parallelize(monkeypatch):
+    """The old ``len(points) // 8`` floor forced sweeps under 16 points
+    serial on any host; sizing is now ``min(cpu, n_points)``."""
+    monkeypatch.delenv("REPRO_SWEEP_WORKERS", raising=False)
+    monkeypatch.setattr(os, "cpu_count", lambda: 8)
+    assert resolve_workers(4) == 4            # small sweep: one worker/point
+    assert resolve_workers(100) == 8          # big sweep: bounded by cpus
+    assert resolve_workers(0) == 1            # floor
+    assert resolve_workers(100, workers=3) == 3   # explicit wins
+
+
+@pytest.mark.tier1
+def test_resolve_workers_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", "1")
+    assert resolve_workers(1000) == 1
+    monkeypatch.setenv("REPRO_SWEEP_WORKERS", "5")
+    assert resolve_workers(1000) == 5
+    assert resolve_workers(1000, workers=2) == 2  # explicit beats env
+
+
+@pytest.mark.tier1
+def test_partition_points_is_complete_presized_and_cache_friendly():
+    pts = grid(queue_depths=(1, 2, 4, 8), queue_latencies=(1, 2, 4),
+               n_samples=8)
+    for workers in (1, 3, 7, len(pts), len(pts) + 9):
+        parts = partition_points(pts, workers)
+        flat = sorted(i for part in parts for i in part)
+        assert flat == list(range(len(pts)))          # exact partition
+        assert len(parts) <= workers
+        # presized: no worker exceeds ceil(n/workers) by more than one
+        # whole lowering-key group (groups are never split)
+        for part in parts:
+            keys = [_lower_key(pts[i]) for i in part]
+            for key in set(keys):
+                owners = [p for p in parts
+                          if any(_lower_key(pts[i]) == key for i in p)]
+                assert len(owners) == 1               # group stays together
+
+
+@pytest.mark.tier1
+def test_lowering_key_drops_latency_always_and_depth_for_queue_free():
+    base = dict(kernel="expf", n_samples=16)
+    assert (_lower_key(SweepPoint(policy="copiftv2", queue_latency=1, **base))
+            == _lower_key(SweepPoint(policy="copiftv2", queue_latency=8,
+                                     **base)))
+    v2_d = {_lower_key(SweepPoint(policy="copiftv2", queue_depth=d, **base))
+            for d in (1, 8)}
+    assert len(v2_d) == 2                     # depth shapes the v2 schedule
+    for pol in ("baseline", "copift"):        # queue-free: depth normalized
+        keys = {_lower_key(SweepPoint(policy=pol, queue_depth=d, **base))
+                for d in (1, 8)}
+        assert len(keys) == 1, pol
+
+
+def test_cached_pipeline_records_match_uncached():
+    """The memoized lowering/reference caches (including the COPIFTv2
+    prefix + depth-saturation reuse) must be invisible in the records."""
+    pts = grid(kernels=["expf", "box_muller"], queue_depths=(1, 8, 16),
+               queue_latencies=(1, 4), n_samples=16)
+    clear_worker_caches()
+    cached = [run_point(p) for p in pts]
+    uncached = [run_point(p, use_caches=False) for p in pts]
+    assert cached == uncached
+
+
+@pytest.mark.tier1
+def test_asymmetric_queue_depths_sweep():
+    """Asymmetric I2F/F2I FIFO geometries: the tighter queue binds its own
+    occupancy, the grid crosses the override axes, and every point still
+    matches the interpreter."""
+    tight = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                                 queue_depth=4, queue_depth_i2f=1,
+                                 queue_depth_f2i=8, n_samples=32))
+    assert tight.ok and tight.equivalent
+    assert tight.max_occ_i2f <= 1 and tight.max_occ_f2i <= 8
+    # same schedule (both target min depth 1), one queue relaxed: widening
+    # F2I from 1 to 8 can only help
+    sym1 = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                                queue_depth=1, n_samples=32))
+    asym = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                                queue_depth=1, queue_depth_f2i=8,
+                                n_samples=32))
+    assert asym.cycles <= sym1.cycles
+    pts = grid(kernels=["expf"], policies=[P.COPIFTV2], queue_depths=(4,),
+               i2f_depths=(None, 1), f2i_depths=(None, 2), n_samples=16)
+    assert len(pts) == 4
+    recs = run_sweep(pts, workers=1)
+    assert all(r.ok and r.equivalent for r in recs)
+    assert {(r.queue_depth_i2f, r.queue_depth_f2i) for r in recs} == \
+        {(None, None), (None, 2), (1, None), (1, 2)}
+
+
+def test_run_point_engines_agree():
+    """Both engines must produce identical sweep records (mod the tag)."""
+    pts = grid(kernels=["logf"], queue_depths=(1, 4), queue_latencies=(1, 8),
+               n_samples=16)
+    for p in pts:
+        ev = run_point(p)
+        cy = run_point(dataclasses.replace(p, engine="cycle"))
+        assert ev.engine == "event" and cy.engine == "cycle"
+        assert dataclasses.replace(ev, engine="x") == \
+            dataclasses.replace(cy, engine="x")
+
+
+# ---------------------------------------------------------------------------
 # CI smoke gate: benchmark sections must run without swallowing failures
 # ---------------------------------------------------------------------------
 
@@ -238,3 +357,4 @@ def test_benchmarks_run_smoke():
     assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
     assert "dse_peak_ipc" in res.stdout
     assert "claims_peak_ipc_v2" in res.stdout
+    assert "sweep_perf_speedup_event_cached" in res.stdout
