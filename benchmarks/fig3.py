@@ -2,7 +2,7 @@
 (c) speedup + energy-efficiency of COPIFTv2 over COPIFT."""
 import time
 
-from repro.core import (KERNELS, PAPER_CLAIMS, MachineConfig, TransformConfig,
+from repro.core import (PAPER_CLAIMS, MachineConfig, TransformConfig,
                         run_suite, summarize)
 from repro.core.policy import ExecutionPolicy as P
 

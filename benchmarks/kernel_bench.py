@@ -5,7 +5,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import flash_attention, moe_gemm, queue_matmul, ssm_scan
 from repro.kernels.queue_matmul.ref import matmul_ref

@@ -2,54 +2,70 @@
 framework-level experiments.  Prints ``name,us_per_call,derived`` CSV.
 
 ``--smoke`` runs the CI-grade path: every section that defines a ``smoke()``
-hook runs its tiny-grid variant, and **nothing is caught** — any section
-failure exits non-zero immediately, so sections cannot silently rot.
+hook runs its tiny-grid variant.  Failures are never swallowed: every
+section still runs (so one broken section cannot hide another), a
+per-section ``PASS``/``FAIL`` summary prints at the end, and any failure
+exits non-zero — the CI smoke job cannot go green on a silently broken
+section.
 """
 import argparse
 import sys
 import traceback
 
 
+def _run_sections(sections) -> None:
+    """Run every (title, callable) section, print a per-section pass/fail
+    summary, and exit non-zero if anything raised."""
+    failures = []
+    statuses = []
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            fn()
+            statuses.append((title, "PASS", ""))
+        except Exception as e:
+            traceback.print_exc()
+            failures.append(title)
+            statuses.append((title, "FAIL", f" ({type(e).__name__}: {e})"))
+    print("# --- summary ---")
+    for title, verdict, detail in statuses:
+        print(f"# {verdict}: {title}{detail}")
+    if failures:
+        sys.exit(f"benchmark sections failed: {failures}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny grids, no failure-swallowing (CI gate)")
+                    help="tiny grids, per-section pass/fail, non-zero exit "
+                         "on any failure (CI gate)")
     args = ap.parse_args(argv)
 
     if args.smoke:
-        # deliberately no try/except: a smoke failure must fail the run
-        from . import dse, fig3, sweep_perf
-        for title, fn in [
+        from . import calibration, dse, fig3, sweep_perf
+        _run_sections([
             ("fig3 smoke (machine model, small n)", fig3.smoke),
             ("dse smoke (tiny sweep grid + equivalence fuzz)", dse.smoke),
             ("sweep_perf smoke (event vs cycle engine throughput)",
              sweep_perf.smoke),
-        ]:
-            print(f"# --- {title} ---")
-            fn()
+            ("calibration smoke (Pareto-selected vs hard-coded default)",
+             calibration.smoke),
+        ])
         return
 
-    from . import (collective_policy, dse, fig3, kernel_bench,
+    from . import (calibration, collective_policy, dse, fig3, kernel_bench,
                    roofline_table, sweep_perf)
-    sections = [
-        ("fig3 (paper Fig.3a/b/c via the machine model)", fig3),
-        ("dse (design-space sweep + Pareto fronts)", dse),
-        ("sweep_perf (DSE points/sec, event vs cycle engine)", sweep_perf),
-        ("kernels (interpret-mode micro-bench)", kernel_bench),
-        ("collective policy (bulk vs ring)", collective_policy),
-        ("roofline (from dry-run artifacts)", roofline_table),
-    ]
-    failed = []
-    for title, mod in sections:
-        print(f"# --- {title} ---")
-        try:
-            mod.main()
-        except Exception as e:
-            failed.append(title)
-            print(f"# SECTION FAILED: {e}")
-            traceback.print_exc()
-    if failed:
-        sys.exit(f"benchmark sections failed: {failed}")
+    _run_sections([
+        ("fig3 (paper Fig.3a/b/c via the machine model)", fig3.main),
+        ("dse (design-space sweep + Pareto fronts)", dse.main),
+        ("sweep_perf (DSE points/sec, event vs cycle engine)",
+         sweep_perf.main),
+        ("calibration (Pareto-selected operating points vs defaults)",
+         calibration.main),
+        ("kernels (interpret-mode micro-bench)", kernel_bench.main),
+        ("collective policy (bulk vs ring)", collective_policy.main),
+        ("roofline (from dry-run artifacts)", roofline_table.main),
+    ])
 
 
 if __name__ == "__main__":

@@ -25,6 +25,33 @@ way; ``--engine cycle`` exists for differential checking and benchmarking.
 Outputs ``sweep.csv`` (every record) and ``pareto.csv`` (front members only)
 under ``--out-dir``; exits non-zero if any configuration fails the
 equivalence check or deadlocks.
+
+Calibration (the calibrate → consume flow)
+------------------------------------------
+
+    PYTHONPATH=src python examples/explore.py calibrate
+    PYTHONPATH=src python examples/explore.py calibrate \
+        --objective energy-bounded-ipc --energy-budget 20000 \
+        --kernels expf,dequant_dot --out-dir artifacts/calibration
+
+``calibrate`` runs the same sweep, reduces it to per-kernel Pareto fronts,
+selects one operating point per kernel under ``--objective`` (``max-ipc``,
+``min-energy`` or ``energy-bounded-ipc`` with ``--energy-budget``), and
+persists each selection as a versioned, schema-checked JSON artifact
+``artifacts/calibration/<kernel>.json`` (grid, front, git provenance and
+selection rationale embedded).  Downstream consumers load the artifacts at
+startup through ``repro.core.policy.PolicyTable``:
+
+* ``kernels/queue_matmul`` takes its ring depth / unroll from the
+  ``dequant_dot`` artifact (workload proxy table in ``core.policy``);
+* ``serve.ServeEngine`` and ``train.make_train_step`` resolve the ``serve``
+  / ``train`` workloads' policies once, at startup;
+* explicit arguments always override, and with no artifact (or a stale
+  schema version) everything falls back to the paper's defaults with a
+  warning — calibration can never brick a run.
+
+Set ``REPRO_CALIBRATION_DIR`` to point consumers (and this command's
+default output) at a different artifact directory.
 """
 import argparse
 import os
@@ -33,9 +60,10 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (ENGINES, KERNELS, ExecutionPolicy, format_front,
-                        grid, pareto_by_kernel, resolve_workers, run_sweep,
-                        sweep_summary, write_csv)
+from repro.core import (ENGINES, KERNELS, ExecutionPolicy, calibrate,
+                        format_front, grid, pareto_by_kernel,
+                        resolve_workers, run_sweep, sweep_summary, write_csv)
+from repro.core.calibrate import OBJECTIVES, calibration_dir
 
 
 def _ints(s):
@@ -48,8 +76,73 @@ def _opt_ints(s):
                  for x in s.split(",") if x)
 
 
+def calibrate_main(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="explore.py calibrate",
+        description="Sweep, reduce to per-kernel Pareto fronts, select an "
+                    "operating point per objective, and write versioned "
+                    "calibration artifacts consumed by queue_matmul / serve "
+                    "/ train (see the module docstring).")
+    ap.add_argument("--kernels", default=None,
+                    help="comma list (default: all six)")
+    ap.add_argument("--policies", default=None,
+                    help="comma list of baseline,copift,copiftv2")
+    ap.add_argument("--depths", type=_ints, default=(1, 2, 4, 8))
+    ap.add_argument("--latencies", type=_ints, default=(1, 2))
+    ap.add_argument("--unrolls", type=_ints, default=(4, 8))
+    ap.add_argument("--n-samples", type=int, default=32)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--engine", choices=ENGINES, default="event")
+    ap.add_argument("--objective", choices=OBJECTIVES, default="max-ipc")
+    ap.add_argument("--energy-budget", type=float, default=None,
+                    help="required for --objective energy-bounded-ipc")
+    ap.add_argument("--tolerance", type=float, default=0.0,
+                    help="dominance tolerance: candidates within this "
+                         "relative distance of the best primary axis tie, "
+                         "resolved on the secondary axis")
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: REPRO_CALIBRATION_DIR "
+                         "or artifacts/calibration)")
+    args = ap.parse_args(argv)
+    if args.objective == "energy-bounded-ipc" and args.energy_budget is None:
+        ap.error("--objective energy-bounded-ipc requires --energy-budget")
+
+    kernels = args.kernels.split(",") if args.kernels else None
+    grid_kw = dict(queue_depths=args.depths, queue_latencies=args.latencies,
+                   unrolls=args.unrolls, n_samples=args.n_samples,
+                   engine=args.engine)
+    if args.policies:
+        grid_kw["policies"] = [ExecutionPolicy.parse(p)
+                               for p in args.policies.split(",")]
+    out_dir = args.out_dir or calibration_dir()
+    t0 = time.time()
+    recs = calibrate(kernels=kernels, objective=args.objective,
+                     energy_budget=args.energy_budget,
+                     tolerance=args.tolerance, grid_kw=grid_kw,
+                     workers=args.workers, out_dir=out_dir)
+    dt = time.time() - t0
+    for kernel in sorted(recs):
+        r = recs[kernel]
+        s = r.selected
+        print(f"== {kernel}: {r.objective} -> {s['policy']} "
+              f"depth={s['queue_depth']} lat={s['queue_latency']} "
+              f"unroll={s['unroll']} (ipc={s['ipc']:.3f}, "
+              f"energy={s['energy']:.1f}; front {len(r.front)}) ==")
+        print(f"   {r.rationale}")
+    print(f"\ncalibrated {len(recs)} kernels in {dt:.2f}s; wrote "
+          f"{out_dir}/<kernel>.json (consumers honour REPRO_CALIBRATION_DIR)")
+    return 0
+
+
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "calibrate":
+        return calibrate_main(argv[1:])
+    ap = argparse.ArgumentParser(
+        description=__doc__.split("\n\n")[0] +
+        "  (Run 'explore.py calibrate --help' for the calibration "
+        "subcommand.)")
     ap.add_argument("--kernels", default=None,
                     help="comma list (default: all six)")
     ap.add_argument("--policies", default=None,

@@ -7,7 +7,7 @@ import argparse
 
 import jax
 
-from repro.config import RunConfig, ShapeConfig
+from repro.config import RunConfig
 from repro.configs import ARCHS, get_reduced
 from repro.models import init_model_params
 from repro.optim import init_opt_state

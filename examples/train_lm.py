@@ -10,7 +10,6 @@ container use --preset small (~19M) for a quick demonstration, or pass
   PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
 """
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -3,10 +3,11 @@ architecture (see DESIGN.md §6) plus reduced smoke variants."""
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from .core.policy import ExecutionPolicy
+from .core.policy import (ExecutionPolicy, OperatingPoint, PolicyTable,
+                          default_table)
 
 
 @dataclass(frozen=True)
@@ -176,6 +177,34 @@ class RunConfig:
     weight_decay: float = 0.1
     grad_clip: float = 1.0
     seed: int = 0
+
+
+#: the RunConfig.policy field default — used to detect caller-pinned policies
+_DEFAULT_RC_POLICY = RunConfig.__dataclass_fields__["policy"].default
+
+
+def resolve_run_config(rc: RunConfig, workload: str,
+                       operating_point: Optional[OperatingPoint] = None,
+                       policy_table: Optional[PolicyTable] = None
+                       ) -> Tuple[RunConfig, OperatingPoint]:
+    """Resolve ``workload``'s operating point once, at startup, and thread
+    its policy into the run config.
+
+    Precedence: an explicit ``operating_point`` wins verbatim; a
+    caller-pinned ``rc.policy`` (any value other than the RunConfig field
+    default) stays authoritative while the calibrated queue geometry still
+    applies; otherwise the calibration-backed table (``policy_table`` or
+    the process default honouring ``REPRO_CALIBRATION_DIR``) supplies the
+    whole point, falling back to the paper's hard-coded defaults when no
+    artifact exists."""
+    table = policy_table if policy_table is not None else default_table()
+    if operating_point is not None:
+        op = table.resolve(workload, override=operating_point)
+    elif rc.policy is not _DEFAULT_RC_POLICY:
+        op = table.resolve(workload, policy=rc.policy)
+    else:
+        op = table.resolve(workload)
+    return dataclasses.replace(rc, policy=op.policy), op
 
 
 def supported_shapes(cfg: ModelConfig) -> List[str]:

@@ -1,6 +1,6 @@
 """Architecture registry: --arch <id> -> ModelConfig (+ reduced smoke)."""
 from importlib import import_module
-from typing import Dict, List
+from typing import List
 
 _MODULES = {
     "falcon-mamba-7b": "falcon_mamba_7b",

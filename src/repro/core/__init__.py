@@ -11,9 +11,14 @@ from .machine import (ENGINES, DeadlockError, MachineConfig, Program,
                       stepper_for)
 from .metrics import (PAPER_CLAIMS, KernelComparison, best, geomean,
                       group_by, run_suite, summarize)
+from .calibrate import (SCHEMA_VERSION, CalibrationError, CalibrationRecord,
+                        StaleArtifactError, calibrate, calibration_dir,
+                        load_calibration, select_operating_point,
+                        validate_artifact, write_artifact)
 from .pareto import (dominates, format_front, pareto_by_kernel, pareto_front,
-                     write_csv)
-from .policy import ExecutionPolicy
+                     read_csv, write_csv)
+from .policy import (WORKLOAD_PROXIES, ExecutionPolicy, OperatingPoint,
+                     PolicyTable, clear_policy_table_cache, default_table)
 from .sweep import (CSV_FIELDS, SweepPoint, SweepRecord, clear_worker_caches,
                     grid, partition_points, resolve_workers, run_point,
                     run_sweep, sweep_summary)
@@ -26,8 +31,13 @@ __all__ = [
     "PAPER_CLAIMS", "KernelComparison", "best", "geomean",
     "group_by", "run_suite", "summarize",
     "dominates", "format_front", "pareto_by_kernel", "pareto_front",
-    "write_csv",
-    "ExecutionPolicy", "TransformConfig", "analyze", "lower",
+    "read_csv", "write_csv",
+    "SCHEMA_VERSION", "CalibrationError", "CalibrationRecord",
+    "StaleArtifactError", "calibrate", "calibration_dir", "load_calibration",
+    "select_operating_point", "validate_artifact", "write_artifact",
+    "WORKLOAD_PROXIES", "ExecutionPolicy", "OperatingPoint", "PolicyTable",
+    "clear_policy_table_cache", "default_table",
+    "TransformConfig", "analyze", "lower",
     "CSV_FIELDS", "SweepPoint", "SweepRecord", "clear_worker_caches", "grid",
     "partition_points", "resolve_workers", "run_point", "run_sweep",
     "sweep_summary",

@@ -1,0 +1,362 @@
+"""DSE calibration: sweep → Pareto front → operating-point selection →
+versioned JSON artifacts that the kernel/serve/train layers consume.
+
+The DSE engine (``core.sweep`` + ``core.pareto``) finds the Pareto-optimal
+(IPC, energy) configurations per kernel; this module closes the loop the
+roadmap names ("feed Pareto fronts back into the TPU-layer policy choices"):
+
+1. :func:`calibrate` runs a sweep grid, reduces it to per-kernel fronts, and
+   :func:`select_operating_point` picks one front member under a declared
+   objective — ``max-ipc``, ``min-energy`` or ``energy-bounded-ipc`` — with
+   deterministic tie-breaking and an optional dominance tolerance (points
+   within ``tolerance`` of the best primary axis count as ties, resolved on
+   the secondary axis: a 0.1% IPC win never buys a 2x energy cost).
+2. Each selection is persisted as ``artifacts/calibration/<kernel>.json`` —
+   a schema-checked (:func:`validate_artifact`), versioned
+   (:data:`SCHEMA_VERSION`) artifact embedding the swept grid, the full
+   front, git-describable provenance and the selection rationale.
+3. ``core.policy.PolicyTable`` loads the artifacts (honouring the
+   ``REPRO_CALIBRATION_DIR`` override) and hands per-workload
+   :class:`~.policy.OperatingPoint`\\ s to ``kernels/queue_matmul``,
+   ``serve.engine`` and ``train.step`` at startup.  Stale or malformed
+   artifacts are skipped with a warning and consumers fall back to the
+   paper's hard-coded headline point, so calibration can never brick a run.
+
+Per-kernel selection (not one global setting) is where the win lives — the
+COPIFT predecessor (arXiv:2503.20590) reports the 1.49x speedup only when
+each kernel picks its own configuration.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+import types
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .pareto import dominates, pareto_by_kernel
+from .policy import ExecutionPolicy, OperatingPoint
+from .sweep import SweepRecord, grid, run_sweep
+
+#: bump on any incompatible artifact-layout change; loaders treat a mismatch
+#: as *stale* and fall back to defaults rather than guessing at old layouts
+SCHEMA_VERSION = 1
+
+OBJECTIVES = ("max-ipc", "min-energy", "energy-bounded-ipc")
+
+#: the configuration + measured-metric fields persisted per front point
+POINT_FIELDS = (
+    "policy", "queue_depth", "queue_latency", "unroll", "unroll_int",
+    "queue_depth_i2f", "queue_depth_f2i", "ipc", "energy", "cycles",
+    "efficiency",
+)
+
+ARTIFACT_FIELDS = ("schema_version", "kernel", "objective", "selected",
+                   "front", "grid", "provenance", "rationale")
+
+OBJECTIVE_FIELDS = ("name", "energy_budget", "tolerance")
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+class CalibrationError(ValueError):
+    """A calibration artifact is malformed (schema violation)."""
+
+
+class StaleArtifactError(CalibrationError):
+    """A calibration artifact was written under a different schema version."""
+
+
+def calibration_dir() -> str:
+    """Artifact directory: ``REPRO_CALIBRATION_DIR`` wins, else the repo's
+    ``artifacts/calibration``."""
+    env = os.environ.get("REPRO_CALIBRATION_DIR", "").strip()
+    return env or os.path.join(_REPO_ROOT, "artifacts", "calibration")
+
+
+def point_to_dict(rec: SweepRecord) -> Dict[str, Any]:
+    return {f: getattr(rec, f) for f in POINT_FIELDS}
+
+
+@dataclass
+class CalibrationRecord:
+    """One kernel's persisted calibration: the selected operating point, the
+    front it was chosen from, and everything needed to reproduce the choice."""
+    kernel: str
+    objective: str
+    selected: Dict[str, Any]
+    front: List[Dict[str, Any]]
+    grid: Dict[str, Any]
+    provenance: Dict[str, Any]
+    rationale: str
+    energy_budget: Optional[float] = None
+    tolerance: float = 0.0
+    schema_version: int = SCHEMA_VERSION
+
+    def operating_point(self) -> OperatingPoint:
+        s = self.selected
+        return OperatingPoint(
+            policy=ExecutionPolicy.parse(s["policy"]),
+            queue_depth=s["queue_depth"], queue_latency=s["queue_latency"],
+            unroll=s["unroll"], unroll_int=s["unroll_int"],
+            queue_depth_i2f=s["queue_depth_i2f"],
+            queue_depth_f2i=s["queue_depth_f2i"], source="calibrated")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema_version": self.schema_version,
+            "kernel": self.kernel,
+            "objective": {"name": self.objective,
+                          "energy_budget": self.energy_budget,
+                          "tolerance": self.tolerance},
+            "selected": dict(self.selected),
+            "front": [dict(p) for p in self.front],
+            "grid": dict(self.grid),
+            "provenance": dict(self.provenance),
+            "rationale": self.rationale,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CalibrationRecord":
+        validate_artifact(d)
+        obj = d["objective"]
+        return cls(kernel=d["kernel"], objective=obj["name"],
+                   energy_budget=obj["energy_budget"],
+                   tolerance=obj["tolerance"], selected=d["selected"],
+                   front=d["front"], grid=d["grid"],
+                   provenance=d["provenance"], rationale=d["rationale"],
+                   schema_version=d["schema_version"])
+
+
+def _check_exact_fields(d: Dict[str, Any], expected: Sequence[str],
+                        where: str) -> None:
+    missing = [f for f in expected if f not in d]
+    extra = [f for f in d if f not in expected]
+    if missing or extra:
+        raise CalibrationError(
+            f"{where}: missing fields {missing}, unexpected fields {extra}")
+
+
+def validate_artifact(d: Dict[str, Any]) -> None:
+    """Strict schema check: exact field sets at every level, a known
+    objective, and the current :data:`SCHEMA_VERSION` (mismatch raises
+    :class:`StaleArtifactError` so loaders can fall back to defaults)."""
+    if not isinstance(d, dict):
+        raise CalibrationError(f"artifact must be an object, got {type(d)}")
+    version = d.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise StaleArtifactError(
+            f"artifact schema_version {version!r} != current "
+            f"{SCHEMA_VERSION} (stale artifact; re-run calibrate)")
+    _check_exact_fields(d, ARTIFACT_FIELDS, "artifact")
+    _check_exact_fields(d["objective"], OBJECTIVE_FIELDS, "objective")
+    name = d["objective"]["name"]
+    if name not in OBJECTIVES:
+        raise CalibrationError(
+            f"unknown objective {name!r} (have {OBJECTIVES})")
+    _check_exact_fields(d["selected"], POINT_FIELDS, "selected")
+    ExecutionPolicy.parse(d["selected"]["policy"])
+    if not isinstance(d["front"], list) or not d["front"]:
+        raise CalibrationError("front must be a non-empty list")
+    for i, p in enumerate(d["front"]):
+        _check_exact_fields(p, POINT_FIELDS, f"front[{i}]")
+    if d["selected"] not in d["front"]:
+        raise CalibrationError("selected point is not a front member")
+
+
+# -- objective-aware selection ----------------------------------------------
+
+def _cheap_hw_key(r: SweepRecord) -> Tuple:
+    """Final tie-break: prefer the cheaper hardware/schedule realization —
+    shallower FIFOs, lower visibility latency, smaller unroll."""
+    d_i2f = r.queue_depth_i2f or r.queue_depth
+    d_f2i = r.queue_depth_f2i or r.queue_depth
+    return (max(d_i2f, d_f2i), r.queue_latency, r.unroll,
+            r.unroll_int or r.unroll, r.policy)
+
+
+def select_operating_point(front: Sequence[SweepRecord], objective: str,
+                           energy_budget: Optional[float] = None,
+                           tolerance: float = 0.0
+                           ) -> Tuple[SweepRecord, str]:
+    """Pick one front member under ``objective``; returns ``(record,
+    rationale)``.
+
+    ``tolerance`` is the dominance tolerance: candidates within that relative
+    distance of the best primary-axis value are treated as tied and the tie
+    is broken on the secondary axis (then on :func:`_cheap_hw_key`).
+    ``energy-bounded-ipc`` maximizes IPC subject to ``energy <=
+    energy_budget``; an infeasible budget degrades to ``min-energy`` and the
+    rationale says so.
+    """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r} "
+                         f"(have {OBJECTIVES})")
+    cands = [r for r in front if r.ok]
+    if not cands:
+        raise CalibrationError("cannot select from an empty Pareto front")
+    note = ""
+    if objective == "energy-bounded-ipc":
+        if energy_budget is None:
+            raise ValueError("energy-bounded-ipc requires energy_budget")
+        feasible = [r for r in cands if r.energy <= energy_budget]
+        if feasible:
+            cands, note = feasible, f" within energy budget {energy_budget:g}"
+        else:
+            objective_eff = "min-energy"
+            note = (f"; budget {energy_budget:g} infeasible "
+                    f"(front min energy {min(r.energy for r in cands):g}), "
+                    f"degraded to min-energy")
+            return _select(cands, objective_eff, tolerance, note)
+        return _select(cands, "max-ipc", tolerance, note)
+    return _select(cands, objective, tolerance, note)
+
+
+def _select(cands: Sequence[SweepRecord], objective: str, tolerance: float,
+            note: str) -> Tuple[SweepRecord, str]:
+    if objective == "max-ipc":
+        best = max(r.ipc for r in cands)
+        tied = [r for r in cands if r.ipc >= best * (1.0 - tolerance)]
+        pick = min(tied, key=lambda r: (r.energy,) + _cheap_hw_key(r))
+        how = f"max-ipc{note}: ipc={pick.ipc:.4f} (front best {best:.4f})"
+    else:                                   # min-energy
+        best = min(r.energy for r in cands)
+        tied = [r for r in cands if r.energy <= best * (1.0 + tolerance)]
+        pick = min(tied, key=lambda r: (-r.ipc,) + _cheap_hw_key(r))
+        how = (f"min-energy{note}: energy={pick.energy:.1f} "
+               f"(front best {best:.1f})")
+    rationale = (f"{how}; picked {pick.policy} depth={pick.queue_depth} "
+                 f"lat={pick.queue_latency} unroll={pick.unroll} from "
+                 f"{len(cands)} candidates ({len(tied)} within tolerance "
+                 f"{tolerance:g})")
+    return pick, rationale
+
+
+# -- provenance + artifact IO ------------------------------------------------
+
+def git_describe() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "describe", "--always", "--dirty", "--tags"],
+            cwd=_REPO_ROOT, capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def artifact_path(kernel: str, directory: Optional[str] = None) -> str:
+    return os.path.join(directory or calibration_dir(), f"{kernel}.json")
+
+
+def write_artifact(rec: CalibrationRecord,
+                   directory: Optional[str] = None) -> str:
+    path = artifact_path(rec.kernel, directory)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(rec.to_dict(), fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path
+
+
+def load_artifact(path: str) -> CalibrationRecord:
+    """Parse + validate one artifact file; raises :class:`CalibrationError`
+    (or :class:`StaleArtifactError`) on any schema violation."""
+    try:
+        with open(path) as fh:
+            d = json.load(fh)
+    except OSError as e:
+        raise CalibrationError(f"unreadable artifact {path}: {e}") from e
+    except json.JSONDecodeError as e:
+        raise CalibrationError(f"artifact {path} is not JSON: {e}") from e
+    return CalibrationRecord.from_dict(d)
+
+
+def load_calibration(kernel: str,
+                     directory: Optional[str] = None
+                     ) -> Optional[CalibrationRecord]:
+    """The artifact for ``kernel``, or None (missing artifacts are normal —
+    consumers fall back to defaults)."""
+    path = artifact_path(kernel, directory)
+    if not os.path.exists(path):
+        return None
+    return load_artifact(path)
+
+
+# -- the end-to-end calibration run ------------------------------------------
+
+#: the default calibration grid — the same 288-configuration space
+#: ``examples/explore.py`` sweeps by default
+DEFAULT_GRID = dict(queue_depths=(1, 2, 4, 8), queue_latencies=(1, 2),
+                    unrolls=(4, 8), n_samples=32)
+
+
+def calibrate(kernels: Optional[Sequence[str]] = None,
+              objective: str = "max-ipc",
+              energy_budget: Optional[float] = None,
+              tolerance: float = 0.0,
+              grid_kw: Optional[Dict[str, Any]] = None,
+              workers: Optional[int] = None,
+              out_dir: Optional[str] = None,
+              write: bool = True) -> Dict[str, CalibrationRecord]:
+    """Sweep → per-kernel fronts → objective selection → artifacts.
+
+    Returns kernel → :class:`CalibrationRecord`; with ``write=True`` (the
+    default) each record is also persisted under ``out_dir`` (defaulting to
+    :func:`calibration_dir`).  Raises if any swept point deadlocks or
+    diverges from the baseline interpreter — a calibration produced by a
+    broken simulation must never be written.
+    """
+    gk = dict(DEFAULT_GRID)
+    gk.update(grid_kw or {})
+    points = grid(kernels=kernels, **gk)
+    records = run_sweep(points, workers=workers)
+    bad = [r for r in records if r.status == "deadlock"
+           or (r.ok and (not r.equivalent or r.fifo_violations))]
+    if bad:
+        raise CalibrationError(
+            f"{len(bad)} swept points deadlocked or diverged from the "
+            f"baseline interpreter, e.g. {bad[0]}; refusing to calibrate")
+    grid_desc: Dict[str, Any] = {
+        "kernels": sorted({p.kernel for p in points}), **{
+            k: (list(v) if isinstance(v, (tuple, list)) else v)
+            for k, v in gk.items()},
+    }
+    if "policies" in grid_desc:
+        grid_desc["policies"] = [
+            ExecutionPolicy.parse(p).value for p in grid_desc["policies"]]
+    provenance = {
+        "git": git_describe(),
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "engine": points[0].engine if points else "event",
+        "n_points": len(points),
+        "n_ok": sum(r.ok for r in records),
+    }
+    out: Dict[str, CalibrationRecord] = {}
+    for kernel, front in pareto_by_kernel(records).items():
+        pick, rationale = select_operating_point(
+            front, objective, energy_budget=energy_budget,
+            tolerance=tolerance)
+        rec = CalibrationRecord(
+            kernel=kernel, objective=objective, energy_budget=energy_budget,
+            tolerance=tolerance, selected=point_to_dict(pick),
+            front=[point_to_dict(r) for r in front], grid=grid_desc,
+            provenance=provenance, rationale=rationale)
+        validate_artifact(rec.to_dict())     # never persist a bad artifact
+        if write:
+            write_artifact(rec, out_dir)
+        out[kernel] = rec
+    return out
+
+
+def never_dominated_by(rec: CalibrationRecord,
+                       baseline: SweepRecord) -> bool:
+    """True iff ``baseline`` does not dominate the selected point — the
+    calibrated choice can never be strictly worse than a hard-coded one."""
+    sel = types.SimpleNamespace(ipc=rec.selected["ipc"],
+                                energy=rec.selected["energy"])
+    return not dominates(baseline, sel)

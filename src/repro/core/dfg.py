@@ -9,7 +9,7 @@ consumer, matching Snitch's SSRs).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .isa import FP_KINDS, INT_DST_FP_KINDS, OpKind, Unit
 

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import (Any, Callable, Dict, Hashable, Iterable, List, Optional,
+from typing import (Callable, Dict, Hashable, Iterable, List, Optional,
                     TypeVar)
 
 from .bench_kernels import KERNELS

@@ -73,6 +73,55 @@ def write_csv(records: Sequence[SweepRecord],
     return _emit(dest)
 
 
+def _parse_stalls(packed: str) -> Dict[str, int]:
+    if not packed:
+        return {}
+    out: Dict[str, int] = {}
+    for item in packed.split(";"):
+        k, _, v = item.partition("=")
+        out[k] = int(v)
+    return out
+
+
+#: per-column parsers for :func:`read_csv`; ``None``-able ints map "" back
+_OPT_INT = ("unroll_int", "queue_depth_i2f", "queue_depth_f2i")
+_INT = ("queue_depth", "queue_latency", "unroll", "n_samples", "cycles",
+        "instrs_int", "instrs_fp", "max_occ_i2f", "max_occ_f2i",
+        "fifo_violations")
+_FLOAT = ("ipc", "energy", "power", "throughput", "efficiency")
+
+
+def row_to_record(row: Dict[str, str]) -> SweepRecord:
+    """Inverse of ``sweep.record_to_row`` — exact for every field (floats
+    survive because ``str(float)`` is repr-round-trippable)."""
+    kw: Dict[str, object] = dict(row)
+    for f in _INT:
+        kw[f] = int(row[f])
+    for f in _OPT_INT:
+        kw[f] = int(row[f]) if row[f] != "" else None
+    for f in _FLOAT:
+        kw[f] = float(row[f])
+    kw["equivalent"] = bool(int(row["equivalent"]))
+    kw["stalls"] = _parse_stalls(row["stalls"])
+    return SweepRecord(**kw)     # type: ignore[arg-type]
+
+
+def read_csv(src: Union[str, TextIO]) -> List[SweepRecord]:
+    """Re-parse a :func:`write_csv` emission back into sweep records; the
+    round trip is lossless (tested in ``tests/test_calibration.py``)."""
+    def _load(fh: TextIO) -> List[SweepRecord]:
+        reader = csv.DictReader(fh)
+        if tuple(reader.fieldnames or ()) != CSV_FIELDS:
+            raise ValueError(
+                f"CSV header {reader.fieldnames} != expected {CSV_FIELDS}")
+        return [row_to_record(row) for row in reader]
+
+    if isinstance(src, str):
+        with open(src, newline="") as fh:
+            return _load(fh)
+    return _load(src)
+
+
 def format_front(front: Sequence[SweepRecord]) -> str:
     """Human-readable table for one kernel's Pareto front."""
     hdr = (f"{'policy':<10} {'depth':>5} {'lat':>3} {'unroll':>6} "

@@ -11,10 +11,25 @@ COPIFTV2  — this paper: DFG partition + schedule; communication and
 The same enum is threaded through the TPU layers (see DESIGN.md §4):
 kernels/queue_matmul (bulk staging vs multi-buffered DMA queue) and
 distributed/collective_matmul (all-gather-then-compute vs ppermute ring).
+
+Policy *selection* lives here too: an :class:`OperatingPoint` bundles the
+policy with the queue geometry / unroll it should run at, and a
+:class:`PolicyTable` resolves one per workload.  The table is populated from
+DSE calibration artifacts (``core.calibrate``, written by
+``examples/explore.py calibrate`` into ``artifacts/calibration/`` or the
+``REPRO_CALIBRATION_DIR`` override); consumers fall back to the paper's
+hard-coded headline point when no artifact exists, and an explicit override
+always wins.  Resolution happens once at startup — the selection machinery
+stays off the hot path (cf. Snitch, arXiv:2002.10143).
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
+import os
+import warnings
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 
 class ExecutionPolicy(enum.Enum):
@@ -27,3 +42,133 @@ class ExecutionPolicy(enum.Enum):
         if isinstance(s, ExecutionPolicy):
             return s
         return cls(s.lower())
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    """One (policy, queue geometry, unroll) choice for a workload.
+
+    The defaults are the paper's headline hardware point (queue depth 4,
+    latency 1, unroll 8 under COPIFTv2) — the sane fallback when no
+    calibration artifact is available.  ``source`` records how the point was
+    chosen: ``"default"`` (fallback), ``"calibrated"`` (loaded from a DSE
+    artifact) or ``"override"`` (caller-pinned).
+    """
+    policy: ExecutionPolicy = ExecutionPolicy.COPIFTV2
+    queue_depth: int = 4
+    queue_latency: int = 1
+    unroll: int = 8
+    unroll_int: Optional[int] = None
+    queue_depth_i2f: Optional[int] = None
+    queue_depth_f2i: Optional[int] = None
+    source: str = "default"
+
+    def effective_depths(self) -> "tuple[int, int]":
+        return (self.queue_depth_i2f or self.queue_depth,
+                self.queue_depth_f2i or self.queue_depth)
+
+
+#: Consumer workloads mapped to the machine-model kernel whose instruction
+#: mix is the closest analogue (DESIGN.md §4): the per-kernel calibration
+#: artifact for the proxy supplies the workload's operating point.
+#:  * ``queue_matmul`` / ``moe_gemm`` stream quantized operand tiles through
+#:    a blocking FIFO ring — the int8 dequantization dot product is the
+#:    matching mixed int/FP kernel;
+#:  * ``serve`` decode is dominated by activation math (exp in softmax /
+#:    gating) — the range-reduction ``expf`` kernel;
+#:  * ``train`` is GEMM-bound (forward + backward matmuls over quantized
+#:    comms) — ``dequant_dot`` again.
+WORKLOAD_PROXIES: Dict[str, str] = {
+    "queue_matmul": "dequant_dot",
+    "moe_gemm": "dequant_dot",
+    "serve": "expf",
+    "train": "dequant_dot",
+}
+
+
+class PolicyTable:
+    """Workload → :class:`OperatingPoint` resolution, calibration-backed.
+
+    Resolution order for :meth:`resolve`:
+
+    1. an explicit ``override`` point (or keyword field overrides) — wins
+       unconditionally, tagged ``source="override"``;
+    2. a calibrated entry for the workload itself, then for its
+       :data:`WORKLOAD_PROXIES` proxy kernel — tagged ``"calibrated"``;
+    3. the :class:`OperatingPoint` defaults — tagged ``"default"``.
+    """
+
+    def __init__(self, entries: Optional[Dict[str, OperatingPoint]] = None,
+                 directory: Optional[str] = None):
+        self.entries: Dict[str, OperatingPoint] = dict(entries or {})
+        self.directory = directory
+
+    @classmethod
+    def load(cls, directory: Optional[str] = None) -> "PolicyTable":
+        """Build a table from every valid artifact in the calibration
+        directory (``REPRO_CALIBRATION_DIR`` or ``artifacts/calibration``).
+        Invalid or stale artifacts are skipped with a warning — consumers
+        then fall back to defaults rather than failing at startup."""
+        # local import: calibrate imports sweep -> policy (cycle otherwise)
+        from .calibrate import (CalibrationError, calibration_dir,
+                                load_artifact)
+        directory = directory or calibration_dir()
+        entries: Dict[str, OperatingPoint] = {}
+        if os.path.isdir(directory):
+            for fname in sorted(os.listdir(directory)):
+                if not fname.endswith(".json"):
+                    continue
+                path = os.path.join(directory, fname)
+                try:
+                    rec = load_artifact(path)
+                except CalibrationError as e:
+                    warnings.warn(
+                        f"ignoring calibration artifact {path}: {e}; "
+                        f"affected workloads fall back to defaults",
+                        stacklevel=2)
+                    continue
+                entries[rec.kernel] = rec.operating_point()
+        return cls(entries, directory=directory)
+
+    def resolve(self, workload: str,
+                override: Optional[OperatingPoint] = None,
+                **field_overrides) -> OperatingPoint:
+        if override is not None:
+            return dataclasses.replace(override, source="override")
+        point = self.entries.get(workload)
+        if point is None:
+            proxy = WORKLOAD_PROXIES.get(workload)
+            if proxy is not None:
+                point = self.entries.get(proxy)
+        if point is None:
+            point = OperatingPoint()
+        if field_overrides:
+            point = dataclasses.replace(point, **field_overrides,
+                                        source="override")
+        return point
+
+    def __repr__(self) -> str:
+        return (f"PolicyTable({sorted(self.entries)} "
+                f"from {self.directory or '<memory>'})")
+
+
+# One table per calibration directory: loading scans the filesystem, and the
+# resolved points must stay stable for a process's lifetime (selection is a
+# startup decision, never a hot-path one).  Keyed by directory so tests can
+# repoint ``REPRO_CALIBRATION_DIR`` at temp dirs without cross-talk.
+_TABLE_CACHE: Dict[str, PolicyTable] = {}
+
+
+def default_table() -> PolicyTable:
+    """The process-wide calibration-backed table (cached per directory)."""
+    from .calibrate import calibration_dir
+    directory = calibration_dir()
+    table = _TABLE_CACHE.get(directory)
+    if table is None:
+        table = _TABLE_CACHE[directory] = PolicyTable.load(directory)
+    return table
+
+
+def clear_policy_table_cache() -> None:
+    """Drop cached tables (tests repointing ``REPRO_CALIBRATION_DIR``)."""
+    _TABLE_CACHE.clear()

@@ -38,7 +38,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 from .dfg import LoopDFG, Node
-from .isa import (E_SSR_STREAM, FP_KINDS, INT_DST_FP_KINDS, Instr, OpKind,
+from .isa import (E_SSR_STREAM, INT_DST_FP_KINDS, Instr, OpKind,
                   Queue, Unit)
 from .machine import Program
 from .policy import ExecutionPolicy

@@ -10,7 +10,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..config import ModelConfig, RunConfig, ShapeConfig
 from ..models.layers import logical_axes_tree

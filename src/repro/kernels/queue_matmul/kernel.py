@@ -25,7 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_hbm, w_hbm, o_ref, xs, ws, acc, sx, sw, *,
-            bm: int, bn: int, bk: int, nk: int, depth: int):
+            bm: int, bn: int, bk: int, nk: int, depth: int, unroll: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -62,18 +62,22 @@ def _kernel(x_hbm, w_hbm, o_ref, xs, ws, acc, sx, sw, *,
             start(t + depth, slot)
         return ()
 
-    jax.lax.fori_loop(0, nk, body, (), unroll=False)
+    # the calibrated schedule-interleave factor maps to K-loop unrolling (the
+    # FP thread retiring several queue pops per trip), clamped to the trip
+    # count so tiny problems still lower
+    jax.lax.fori_loop(0, nk, body, (), unroll=max(1, min(unroll, nk)))
     o_ref[...] = acc[...].astype(o_ref.dtype)
 
 
 def queue_matmul_kernel(x: jax.Array, w: jax.Array, *, bm: int, bn: int,
                         bk: int, depth: int, interpret: bool,
-                        out_dtype) -> jax.Array:
+                        out_dtype, unroll: int = 1) -> jax.Array:
     m, k = x.shape
     _, n = w.shape
     nk = k // bk
     grid = (m // bm, n // bn)
-    kern = functools.partial(_kernel, bm=bm, bn=bn, bk=bk, nk=nk, depth=depth)
+    kern = functools.partial(_kernel, bm=bm, bn=bn, bk=bk, nk=nk, depth=depth,
+                             unroll=unroll)
     return pl.pallas_call(
         kern,
         grid=grid,

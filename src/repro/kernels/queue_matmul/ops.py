@@ -1,4 +1,14 @@
-"""Jitted public wrapper: padding to MXU-aligned tiles + policy plumbing."""
+"""Jitted public wrapper: padding to MXU-aligned tiles + policy plumbing.
+
+Queue geometry is no longer hard-coded: when ``depth`` / ``policy`` /
+``unroll`` are left unset, they resolve once (outside the jit) from the
+calibration-backed :class:`~repro.core.policy.PolicyTable` — the
+``queue_matmul`` workload proxies to the ``dequant_dot`` machine-model kernel
+whose DSE Pareto front picked the operating point (``examples/explore.py
+calibrate``; override the artifact directory with ``REPRO_CALIBRATION_DIR``).
+Explicit arguments always win, and with no artifact present the paper's
+headline point (COPIFTv2, depth 4, unroll 8) is the fallback.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,7 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ...core.policy import ExecutionPolicy
+from ...core.policy import ExecutionPolicy, OperatingPoint, default_table
 from .kernel import queue_matmul_kernel
 from .ref import matmul_ref
 
@@ -19,17 +29,19 @@ def _pad_to(a: jax.Array, mults: Tuple[int, int]) -> jax.Array:
     return a
 
 
-@partial(jax.jit, static_argnames=("block", "depth", "interpret", "policy"))
-def queue_matmul(x: jax.Array, w: jax.Array, *,
-                 block: Tuple[int, int, int] = (128, 128, 128),
-                 depth: int = 2,
-                 policy: Optional[ExecutionPolicy] = None,
-                 interpret: bool = True) -> jax.Array:
-    """y = x @ w through the queue-pipelined kernel.
+def operating_point() -> OperatingPoint:
+    """The operating point ``queue_matmul`` runs at when called without
+    explicit ``depth``/``policy``/``unroll`` (resolution is a startup-time
+    table lookup, never a per-call sweep)."""
+    return default_table().resolve("queue_matmul")
 
-    ``policy`` overrides ``depth``: BASELINE falls back to the XLA matmul,
-    COPIFT forces depth=1 (batch-synchronized staging), COPIFTV2 keeps the
-    requested multi-buffer depth."""
+
+@partial(jax.jit,
+         static_argnames=("block", "depth", "unroll", "interpret", "policy"))
+def _queue_matmul(x: jax.Array, w: jax.Array, *,
+                  block: Tuple[int, int, int], depth: int,
+                  unroll: int, policy: ExecutionPolicy,
+                  interpret: bool) -> jax.Array:
     if policy is ExecutionPolicy.BASELINE:
         return matmul_ref(x, w).astype(x.dtype)
     if policy is ExecutionPolicy.COPIFT:
@@ -39,5 +51,37 @@ def queue_matmul(x: jax.Array, w: jax.Array, *,
     xp = _pad_to(x, (bm, bk))
     wp = _pad_to(w, (bk, bn))
     out = queue_matmul_kernel(xp, wp, bm=bm, bn=bn, bk=bk, depth=depth,
-                              interpret=interpret, out_dtype=x.dtype)
+                              unroll=unroll, interpret=interpret,
+                              out_dtype=x.dtype)
     return out[:m0, :n0]
+
+
+def queue_matmul(x: jax.Array, w: jax.Array, *,
+                 block: Tuple[int, int, int] = (128, 128, 128),
+                 depth: Optional[int] = None,
+                 unroll: Optional[int] = None,
+                 policy: Optional[ExecutionPolicy] = None,
+                 interpret: bool = True) -> jax.Array:
+    """y = x @ w through the queue-pipelined kernel.
+
+    ``policy`` overrides ``depth``: BASELINE falls back to the XLA matmul,
+    COPIFT forces depth=1 (batch-synchronized staging), COPIFTV2 keeps the
+    requested multi-buffer depth.  Unset knobs come from the calibration
+    table (see module docstring); the I2F depth of an asymmetric calibrated
+    geometry maps to the ring depth (the HBM→VMEM ring *is* the I2F queue).
+    Explicit arguments always win — in particular an explicit ``depth``
+    with ``policy`` unset runs the depth-honouring COPIFTv2 path (the
+    pre-calibration behavior), never a table policy that would discard it.
+    """
+    if depth is None or unroll is None or policy is None:
+        if policy is None and depth is not None:
+            policy = ExecutionPolicy.COPIFTV2
+        pt = operating_point()
+        if policy is None:
+            policy = pt.policy
+        if depth is None:
+            depth = pt.queue_depth_i2f or pt.queue_depth
+        if unroll is None:
+            unroll = pt.unroll
+    return _queue_matmul(x, w, block=block, depth=depth, unroll=unroll,
+                         policy=policy, interpret=interpret)

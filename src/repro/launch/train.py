@@ -10,11 +10,9 @@ trains reduced/custom-width configs on the host devices.  Examples:
 """
 import argparse
 import dataclasses
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from ..config import RunConfig, ShapeConfig
 from ..configs import ARCHS, get_config, get_reduced
@@ -35,7 +33,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--policy", default="copiftv2")
+    ap.add_argument("--policy", default=None,
+                    help="pin the execution policy (default: resolve the "
+                         "'train' workload from the calibration table, "
+                         "see REPRO_CALIBRATION_DIR)")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -47,9 +48,13 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, d_model=args.width)
     if args.layers:
         cfg = dataclasses.replace(cfg, n_layers=args.layers)
-    from ..core.policy import ExecutionPolicy
-    rc = RunConfig(policy=ExecutionPolicy.parse(args.policy),
-                   dtype="float32", param_dtype="float32", remat=False,
+    from ..core.policy import ExecutionPolicy, default_table
+    # a CLI pin overrides only the policy field: the calibrated queue
+    # geometry (depth/unroll) for the train workload still applies
+    op = (default_table().resolve(
+              "train", policy=ExecutionPolicy.parse(args.policy))
+          if args.policy else None)
+    rc = RunConfig(dtype="float32", param_dtype="float32", remat=False,
                    lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                    total_steps=args.steps, microbatch=args.microbatch,
                    seed=args.seed)
@@ -61,7 +66,11 @@ def main() -> None:
     params = init_model_params(jax.random.PRNGKey(args.seed), cfg)
 
     trainer = FaultTolerantTrainer(cfg, shape, rc, make_local_mesh,
-                                   args.ckpt_dir, ckpt_every=args.ckpt_every)
+                                   args.ckpt_dir, ckpt_every=args.ckpt_every,
+                                   operating_point=op)
+    top = trainer.operating_point
+    print(f"policy={top.policy.value} (source={top.source}, "
+          f"depth={top.queue_depth}, unroll={top.unroll})")
     t0 = time.time()
     out = trainer.run(params, num_steps=args.steps)
     dt = time.time() - t0

@@ -9,13 +9,12 @@ at 32k context would need terabytes; blockwise keeps the working set at
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..config import MLAConfig, ModelConfig
+from ..config import ModelConfig
 from .layers import ParamSpec, apply_rope, rms_norm, rope_angles
 
 NEG_INF = -1e30

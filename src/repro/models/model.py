@@ -5,8 +5,6 @@ params — compile time stays flat in depth); the hybrid family scans over its
 repeating (rec, rec, attn) macro-block with an unrolled tail."""
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

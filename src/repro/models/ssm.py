@@ -8,7 +8,6 @@ the O(1) recurrent update — the reason ``long_500k`` runs for this family.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Tuple
 
 import jax

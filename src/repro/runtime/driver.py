@@ -12,14 +12,12 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Dict, Optional
 
-import jax
-import numpy as np
-
 from ..checkpoint.manager import CheckpointManager, latest_step, restore
 from ..config import ModelConfig, RunConfig, ShapeConfig
-from ..data.pipeline import PrefetchLoader, SyntheticLMStream
+from ..core.policy import OperatingPoint, PolicyTable
+from ..data.pipeline import SyntheticLMStream
 from ..optim import init_opt_state
-from ..train.step import make_train_step
+from ..train.step import make_train_step, resolve_run_config
 from .straggler import StragglerMonitor
 
 Pytree = Any
@@ -33,7 +31,13 @@ class FaultTolerantTrainer:
     def __init__(self, cfg: ModelConfig, shape: ShapeConfig, rc: RunConfig,
                  mesh_factory: Callable[[], Any], ckpt_dir: str,
                  ckpt_every: int = 50,
-                 fault_hook: Optional[Callable[[int], None]] = None):
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 operating_point: Optional[OperatingPoint] = None,
+                 policy_table: Optional[PolicyTable] = None):
+        # policy resolution happens once here; restarts re-make the jitted
+        # step with the SAME pinned operating point, never a fresh lookup
+        rc, self.operating_point = resolve_run_config(
+            rc, "train", operating_point, policy_table)
         self.cfg, self.shape, self.rc = cfg, shape, rc
         self.mesh_factory = mesh_factory
         self.ckpt = CheckpointManager(ckpt_dir, keep=3)
@@ -46,7 +50,8 @@ class FaultTolerantTrainer:
 
     def _build(self, params, opt):
         mesh = self.mesh_factory()
-        step_fn, _ = make_train_step(self.cfg, self.shape, self.rc, mesh)
+        step_fn, _ = make_train_step(self.cfg, self.shape, self.rc, mesh,
+                                     operating_point=self.operating_point)
         return mesh, step_fn
 
     def run(self, params: Pytree, opt=None, start_step: int = 0,

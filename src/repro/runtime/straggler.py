@@ -3,7 +3,6 @@ with a mitigation hook.  On real clusters the hook re-shards or evicts the
 slow host; in this container tests inject synthetic timings."""
 from __future__ import annotations
 
-import math
 from collections import deque
 from typing import Callable, Deque, List, Optional, Tuple
 

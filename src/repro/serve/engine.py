@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..config import ModelConfig, RunConfig
+from ..config import ModelConfig, RunConfig, resolve_run_config
+from ..core.policy import OperatingPoint, PolicyTable
 from ..models.model import decode_step, init_cache
 
 Pytree = Any
@@ -32,11 +33,29 @@ class Request:
 
 
 class ServeEngine:
+    """Continuous-batching engine.
+
+    The execution policy is resolved per workload at startup through
+    :func:`repro.config.resolve_run_config`: an explicit ``operating_point``
+    wins, a caller-pinned (non-default) ``rc.policy`` stays authoritative,
+    and otherwise the calibration-backed
+    :class:`~repro.core.policy.PolicyTable` (``policy_table`` or the
+    process-wide default honouring ``REPRO_CALIBRATION_DIR``) supplies the
+    ``"serve"`` workload's point, falling back to the paper's defaults when
+    no artifact exists.  The resolved policy is threaded into the engine's
+    :class:`RunConfig` so every kernel the decode path reaches sees it; the
+    resolution itself never touches the per-step hot path.
+    """
+
     def __init__(self, params: Pytree, cfg: ModelConfig, rc: RunConfig,
                  batch_slots: int = 4, max_len: int = 256,
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 operating_point: Optional[OperatingPoint] = None,
+                 policy_table: Optional[PolicyTable] = None):
         assert cfg.causal, "serving requires an autoregressive model"
         self.params = params
+        rc, self.operating_point = resolve_run_config(
+            rc, "serve", operating_point, policy_table)
         self.cfg, self.rc = cfg, rc
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pending: List[Request] = []

@@ -10,13 +10,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..config import ModelConfig, RunConfig, ShapeConfig
+from ..config import (ModelConfig, RunConfig, ShapeConfig,
+                      resolve_run_config)
+from ..core.policy import OperatingPoint, PolicyTable
 from ..distributed.compression import compress_grads
 from ..distributed.sharding import input_pspecs, param_pspecs
 from ..models.model import forward
-from ..optim import OptState, adamw_update, init_opt_state, opt_state_shapes
+from ..optim import OptState, adamw_update
 
 Pytree = Any
+
+__all__ = ["loss_fn", "train_step", "make_train_step", "resolve_run_config"]
 
 
 def loss_fn(params: Pytree, batch: Dict[str, jax.Array], cfg: ModelConfig,
@@ -75,9 +79,15 @@ def train_step(params: Pytree, opt: OptState, batch: Dict[str, jax.Array],
 
 
 def make_train_step(cfg: ModelConfig, shape: ShapeConfig, rc: RunConfig,
-                    mesh: Mesh):
+                    mesh: Mesh,
+                    operating_point: Optional[OperatingPoint] = None,
+                    policy_table: Optional[PolicyTable] = None):
     """Returns (jitted step, in/out shardings) for pjit execution and AOT
-    lowering (the dry-run calls .lower on this)."""
+    lowering (the dry-run calls .lower on this).  The ``"train"`` workload's
+    execution policy resolves through :func:`resolve_run_config` at factory
+    time — calibrated when an artifact exists, default otherwise, pinned by
+    an explicit ``operating_point``."""
+    rc, _op = resolve_run_config(rc, "train", operating_point, policy_table)
     pspec = param_pspecs(cfg, mesh, rc)
     o_state = OptState(step=P(), mu=pspec, nu=pspec)
     in_batch = input_pspecs(cfg, shape, mesh)

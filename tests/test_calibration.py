@@ -1,0 +1,358 @@
+"""Calibration-layer tests: lossless CSV round trips, strict artifact
+schema (missing/extra fields rejected, stale versions fall back with a
+warning), objective-aware selection laws, and the consumer paths —
+queue_matmul / serve / train demonstrably load operating points from a tmp
+``REPRO_CALIBRATION_DIR``."""
+import copy
+import dataclasses
+import io
+import json
+import os
+import sys
+
+import pytest
+
+from repro.config import ModelConfig, RunConfig
+from repro.core import (CalibrationError, OperatingPoint, StaleArtifactError,
+                        SweepPoint, SweepRecord, calibrate,
+                        clear_policy_table_cache, default_table, grid,
+                        pareto_front, read_csv, run_point, run_sweep,
+                        select_operating_point, validate_artifact, write_csv)
+from repro.core.calibrate import (SCHEMA_VERSION, artifact_path,
+                                  load_artifact, never_dominated_by)
+from repro.core.policy import ExecutionPolicy as P
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: small but real grid that includes the hard-coded default configuration
+#: (copiftv2, depth 4, latency 1, unroll 8)
+TINY_GRID = dict(queue_depths=(1, 2, 4), queue_latencies=(1,),
+                 unrolls=(4, 8), n_samples=16)
+
+
+@pytest.fixture
+def tmp_calibration(tmp_path, monkeypatch):
+    """Point every consumer at an isolated artifact directory."""
+    monkeypatch.setenv("REPRO_CALIBRATION_DIR", str(tmp_path))
+    clear_policy_table_cache()
+    yield tmp_path
+    clear_policy_table_cache()
+
+
+# ---------------------------------------------------------------------------
+# CSV emission <-> re-parse round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_csv_round_trip_is_lossless(tmp_path):
+    pts = grid(kernels=["expf", "histf"], queue_depths=(1, 4),
+               i2f_depths=(None, 1), n_samples=16)
+    recs = run_sweep(pts, workers=1)
+    # adversarial rows: rejected status with CSV-hostile detail text, and a
+    # deadlock-shaped record with empty metrics
+    recs.append(dataclasses.replace(
+        copy.deepcopy(recs[0]), status="rejected", equivalent=False,
+        detail='unroll=3 infeasible, "quoted", comma,\nand a newline',
+        stalls={}))
+    path = str(tmp_path / "sweep.csv")
+    assert write_csv(recs, path) == len(recs)
+    assert read_csv(path) == recs
+    # text-handle round trip too (what the CLI pipes through)
+    buf = io.StringIO()
+    write_csv(recs, buf)
+    buf.seek(0)
+    assert read_csv(buf) == recs
+
+
+@pytest.mark.tier1
+def test_read_csv_rejects_foreign_header(tmp_path):
+    path = tmp_path / "bad.csv"
+    path.write_text("kernel,ipc\nexpf,1.0\n")
+    with pytest.raises(ValueError, match="header"):
+        read_csv(str(path))
+
+
+# ---------------------------------------------------------------------------
+# Objective-aware selection over the Pareto front
+# ---------------------------------------------------------------------------
+
+def _rec(ipc, energy, **kw):
+    base = dict(kernel="synth", policy="copiftv2", queue_depth=4,
+                queue_latency=1, unroll=8, unroll_int=None, n_samples=16,
+                status="ok", cycles=100, efficiency=1.0 / energy)
+    base.update(kw)
+    return SweepRecord(ipc=ipc, energy=energy, **base)
+
+
+SYNTH_FRONT = [_rec(2.0, 100.0, queue_depth=8), _rec(1.9, 50.0),
+               _rec(1.0, 10.0, queue_depth=1)]
+
+
+@pytest.mark.tier1
+def test_selection_objectives_and_tolerance():
+    pick, why = select_operating_point(SYNTH_FRONT, "max-ipc")
+    assert pick.ipc == 2.0 and "max-ipc" in why
+    pick, _ = select_operating_point(SYNTH_FRONT, "min-energy")
+    assert pick.energy == 10.0
+    # bounded: best IPC whose energy fits the budget
+    pick, _ = select_operating_point(SYNTH_FRONT, "energy-bounded-ipc",
+                                     energy_budget=60.0)
+    assert pick.ipc == 1.9
+    # infeasible budget degrades to min-energy, and says so
+    pick, why = select_operating_point(SYNTH_FRONT, "energy-bounded-ipc",
+                                       energy_budget=5.0)
+    assert pick.energy == 10.0 and "infeasible" in why
+    # dominance tolerance: a 5% IPC concession buys the 2x cheaper point
+    pick, _ = select_operating_point(SYNTH_FRONT, "max-ipc", tolerance=0.1)
+    assert pick.ipc == 1.9 and pick.energy == 50.0
+    with pytest.raises(ValueError):
+        select_operating_point(SYNTH_FRONT, "max-ipc-typo")
+    with pytest.raises(ValueError):
+        select_operating_point(SYNTH_FRONT, "energy-bounded-ipc")
+    with pytest.raises(CalibrationError):
+        select_operating_point([], "max-ipc")
+
+
+@pytest.mark.tier1
+def test_selection_prefers_cheaper_hardware_on_exact_ties():
+    """Equal (ipc, energy): the shallower FIFO / smaller unroll wins."""
+    tie = [_rec(1.5, 40.0, queue_depth=8, unroll=8),
+           _rec(1.5, 40.0, queue_depth=2, unroll=4)]
+    for objective in ("max-ipc", "min-energy"):
+        pick, _ = select_operating_point(tie, objective)
+        assert (pick.queue_depth, pick.unroll) == (2, 4), objective
+
+
+def test_calibrated_point_on_front_never_dominated_by_default(tmp_calibration):
+    """The acceptance contract: per kernel, the selection is a front member
+    and the old hard-coded default never dominates it."""
+    recs = calibrate(kernels=["expf", "poly_lcg"], grid_kw=TINY_GRID,
+                     workers=1, write=False)
+    for kernel, rec in recs.items():
+        assert rec.selected in rec.front
+        default = run_point(SweepPoint(kernel=kernel, policy="copiftv2",
+                                       queue_depth=4, queue_latency=1,
+                                       unroll=8, n_samples=16))
+        assert default.ok
+        assert never_dominated_by(rec, default), kernel
+        # and the front really is the Pareto front of a sweep containing
+        # the default config, so the selection is globally non-dominated
+        front = pareto_front(run_sweep(
+            grid(kernels=[kernel], **TINY_GRID), workers=1))
+        assert rec.selected in [
+            {f: getattr(r, f) for f in rec.selected} for r in front]
+
+
+# ---------------------------------------------------------------------------
+# Artifact schema strictness + stale fallback
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def one_artifact_dict():
+    recs = calibrate(kernels=["histf"], grid_kw=TINY_GRID, workers=1,
+                     write=False)
+    return recs["histf"].to_dict()
+
+
+@pytest.mark.tier1
+def test_artifact_schema_accepts_the_emitted_layout(one_artifact_dict):
+    validate_artifact(one_artifact_dict)     # must not raise
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("missing", ["kernel", "objective", "selected",
+                                     "front", "grid", "provenance",
+                                     "rationale"])
+def test_artifact_schema_rejects_missing_fields(one_artifact_dict, missing):
+    d = copy.deepcopy(one_artifact_dict)
+    d.pop(missing)
+    with pytest.raises(CalibrationError, match=missing):
+        validate_artifact(d)
+
+
+@pytest.mark.tier1
+def test_artifact_schema_rejects_extra_and_malformed_fields(one_artifact_dict):
+    d = copy.deepcopy(one_artifact_dict)
+    d["surprise"] = 1
+    with pytest.raises(CalibrationError, match="surprise"):
+        validate_artifact(d)
+    d = copy.deepcopy(one_artifact_dict)
+    d["selected"].pop("queue_depth")
+    with pytest.raises(CalibrationError, match="queue_depth"):
+        validate_artifact(d)
+    d = copy.deepcopy(one_artifact_dict)
+    d["front"][0]["bonus"] = 2
+    with pytest.raises(CalibrationError, match="bonus"):
+        validate_artifact(d)
+    d = copy.deepcopy(one_artifact_dict)
+    d["objective"]["name"] = "fastest-vibes"
+    with pytest.raises(CalibrationError, match="fastest-vibes"):
+        validate_artifact(d)
+    d = copy.deepcopy(one_artifact_dict)
+    d["selected"] = dict(d["front"][0], queue_depth=999)
+    with pytest.raises(CalibrationError, match="front member"):
+        validate_artifact(d)
+
+
+@pytest.mark.tier1
+def test_artifact_version_bump_is_stale(one_artifact_dict):
+    d = copy.deepcopy(one_artifact_dict)
+    d["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(StaleArtifactError):
+        validate_artifact(d)
+
+
+def test_stale_artifact_falls_back_to_defaults_with_warning(tmp_calibration):
+    calibrate(kernels=["expf", "dequant_dot"], grid_kw=TINY_GRID, workers=1)
+    stale = artifact_path("dequant_dot")
+    d = json.load(open(stale))
+    d["schema_version"] = SCHEMA_VERSION + 1
+    json.dump(d, open(stale, "w"))
+    clear_policy_table_cache()
+    with pytest.warns(UserWarning, match="stale"):
+        table = default_table()
+    # the stale kernel's consumers degrade to defaults ...
+    assert table.resolve("queue_matmul").source == "default"
+    assert table.resolve("train").source == "default"
+    # ... while intact artifacts keep serving their workloads
+    assert table.resolve("serve").source == "calibrated"
+
+
+def test_corrupt_artifact_also_falls_back(tmp_calibration):
+    calibrate(kernels=["expf"], grid_kw=TINY_GRID, workers=1)
+    with open(artifact_path("expf"), "a") as fh:
+        fh.write("not json")
+    clear_policy_table_cache()
+    with pytest.warns(UserWarning, match="ignoring calibration artifact"):
+        table = default_table()
+    assert table.resolve("serve").source == "default"
+
+
+# ---------------------------------------------------------------------------
+# Consumers load calibration through REPRO_CALIBRATION_DIR
+# ---------------------------------------------------------------------------
+
+def test_queue_matmul_loads_calibrated_operating_point(tmp_calibration):
+    import jax
+    import numpy as np
+    from repro.kernels import queue_matmul
+    from repro.kernels.queue_matmul import ops
+    from repro.kernels.queue_matmul.ref import matmul_ref
+
+    calibrate(kernels=["dequant_dot"], grid_kw=TINY_GRID, workers=1)
+    art = load_artifact(artifact_path("dequant_dot"))
+    op = ops.operating_point()
+    assert op.source == "calibrated"
+    assert op.queue_depth == art.selected["queue_depth"]
+    assert op.unroll == art.selected["unroll"]
+    # explicit arguments still beat the table, and the calibrated path
+    # actually runs the kernel (ring depth/unroll come from the artifact)
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 32))
+    y = queue_matmul(x, w, block=(128, 128, 128))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(matmul_ref(x, w)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_queue_matmul_explicit_depth_survives_calibrated_policy(
+        tmp_calibration, monkeypatch):
+    """An explicit depth sweep must stay a depth sweep even when the table
+    would resolve a policy (BASELINE/COPIFT) that discards depth."""
+    from repro.kernels.queue_matmul import ops
+
+    calls = []
+    monkeypatch.setattr(
+        ops, "_queue_matmul",
+        lambda x, w, **kw: calls.append(kw) or x @ w)
+    # a table whose resolved policy would ignore depth entirely
+    monkeypatch.setattr(
+        ops, "operating_point",
+        lambda: OperatingPoint(policy=P.BASELINE, source="calibrated"))
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4)); w = jnp.ones((4, 4))
+    ops.queue_matmul(x, w, depth=3)
+    assert calls[-1]["depth"] == 3
+    assert calls[-1]["policy"] is P.COPIFTV2     # the depth-honouring path
+    ops.queue_matmul(x, w)                       # no explicit depth: table wins
+    assert calls[-1]["policy"] is P.BASELINE
+
+
+def test_serve_engine_resolves_policy_at_startup(tmp_calibration):
+    import jax.numpy as jnp                              # noqa: F401
+    from repro.serve import ServeEngine
+
+    # a COPIFT-only sweep forces the calibrated policy to differ from the
+    # RunConfig default (COPIFTV2), so loading is observable
+    calibrate(kernels=["expf"], grid_kw=dict(policies=(P.COPIFT,),
+                                             **TINY_GRID), workers=1)
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=1, d_ff=32, vocab=64)
+    rc = RunConfig(dtype="float32", param_dtype="float32", remat=False)
+    eng = ServeEngine({}, cfg, rc, batch_slots=2, max_len=8)
+    assert eng.operating_point.source == "calibrated"
+    assert eng.rc.policy is P.COPIFT
+    # explicit override wins
+    eng = ServeEngine({}, cfg, rc, batch_slots=2, max_len=8,
+                      operating_point=OperatingPoint(policy=P.BASELINE))
+    assert eng.operating_point.source == "override"
+    assert eng.rc.policy is P.BASELINE
+
+
+def test_train_step_resolves_policy_at_startup(tmp_calibration):
+    from repro.train.step import resolve_run_config
+
+    calibrate(kernels=["dequant_dot"],
+              grid_kw=dict(policies=(P.COPIFT,), **TINY_GRID), workers=1)
+    rc, op = resolve_run_config(RunConfig(), "train")
+    assert op.source == "calibrated" and rc.policy is P.COPIFT
+    rc, op = resolve_run_config(
+        RunConfig(), "train",
+        operating_point=OperatingPoint(policy=P.BASELINE))
+    assert op.source == "override" and rc.policy is P.BASELINE
+    # a caller-pinned (non-default) RunConfig policy stays authoritative,
+    # while the calibrated queue geometry still applies
+    cal = default_table().resolve("train")
+    rc, op = resolve_run_config(RunConfig(policy=P.BASELINE), "train")
+    assert op.source == "override" and rc.policy is P.BASELINE
+    assert (op.queue_depth, op.unroll) == (cal.queue_depth, cal.unroll)
+    # no artifact for the workload or its proxy: paper defaults
+    clear_policy_table_cache()
+    os.remove(artifact_path("dequant_dot"))
+    rc, op = resolve_run_config(RunConfig(), "train")
+    assert op.source == "default" and rc.policy is P.COPIFTV2
+
+
+@pytest.mark.tier1
+def test_policy_table_resolution_order(tmp_calibration):
+    table = default_table()
+    assert table.entries == {}                       # empty tmp dir
+    assert table.resolve("queue_matmul").source == "default"
+    pin = OperatingPoint(policy=P.BASELINE, queue_depth=2)
+    got = table.resolve("queue_matmul", override=pin)
+    assert got.source == "override" and got.queue_depth == 2
+    got = table.resolve("serve", queue_depth=16)
+    assert got.source == "override" and got.queue_depth == 16
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run smoke: per-section summary + non-zero exit on failure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_run_sections_summarizes_and_fails_nonzero(capsys):
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import _run_sections
+    finally:
+        sys.path.pop(0)
+
+    def boom():
+        raise RuntimeError("kaput")
+
+    _run_sections([("fine", lambda: print("ok"))])     # all-pass: no exit
+    with pytest.raises(SystemExit) as ei:
+        _run_sections([("fine", lambda: None), ("broken", boom)])
+    assert "broken" in str(ei.value)
+    out = capsys.readouterr().out
+    assert "# PASS: fine" in out
+    assert "# FAIL: broken (RuntimeError: kaput)" in out

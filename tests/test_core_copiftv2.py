@@ -4,11 +4,11 @@ import math
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (KERNELS, MachineConfig, PAPER_CLAIMS, Program,
-                        TransformConfig, geomean, lower, run_suite, simulate,
+from repro.core import (KERNELS, MachineConfig,
+                        TransformConfig, lower, run_suite, simulate,
                         summarize)
 from repro.core.dfg import LoopDFG, Node, s
-from repro.core.isa import OpKind, Queue, Unit
+from repro.core.isa import OpKind, Unit
 from repro.core.policy import ExecutionPolicy as P
 
 TC = TransformConfig(n_samples=128)

@@ -4,9 +4,6 @@ import os
 import subprocess
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 

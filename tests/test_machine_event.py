@@ -18,7 +18,7 @@ import os
 import pytest
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: E402
+from _hypothesis_compat import given, settings, st  # noqa: E402
 
 from repro.core import (KERNELS, MachineConfig, Program, ReferenceStepper,
                         Stepper, TransformConfig, lower, simulate,

@@ -5,7 +5,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import CheckpointManager, restore, save
@@ -14,12 +13,12 @@ from repro.config import RunConfig, ShapeConfig
 from repro.configs import get_reduced
 from repro.data import PrefetchLoader, SyntheticLMStream
 from repro.distributed.compression import dequantize_int8, quantize_int8
-from repro.models import forward, init_model_params
-from repro.optim import (adamw_update, clip_by_global_norm, init_opt_state,
+from repro.models import init_model_params
+from repro.optim import (clip_by_global_norm, init_opt_state,
                          lr_schedule)
 from repro.runtime import FaultTolerantTrainer, InjectedFault, StragglerMonitor
 from repro.serve import ServeEngine
-from repro.train import loss_fn, train_step
+from repro.train import train_step
 
 RC = RunConfig(remat=False, dtype="float32", lr=1e-2, warmup_steps=5,
                total_steps=100)

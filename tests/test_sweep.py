@@ -358,3 +358,8 @@ def test_benchmarks_run_smoke():
     assert "dse_peak_ipc" in res.stdout
     assert "claims_peak_ipc_v2" in res.stdout
     assert "sweep_perf_speedup_event_cached" in res.stdout
+    assert "calibration_expf_ipc_gain" in res.stdout
+    # per-section pass/fail summary: every section reports, none failed
+    assert "# --- summary ---" in res.stdout
+    assert "# FAIL" not in res.stdout
+    assert res.stdout.count("# PASS:") == 4
