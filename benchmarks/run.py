@@ -42,7 +42,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import calibration, dse, fig3, sweep_perf
+        from . import (calibration, cluster_scaling, dse, fig3, front_diff,
+                       sweep_perf)
         _run_sections([
             ("fig3 smoke (machine model, small n)", fig3.smoke),
             ("dse smoke (tiny sweep grid + equivalence fuzz)", dse.smoke),
@@ -50,11 +51,16 @@ def main(argv=None) -> None:
              sweep_perf.smoke),
             ("calibration smoke (Pareto-selected vs hard-coded default)",
              calibration.smoke),
+            ("cluster scaling smoke (weak/strong 1-4 cores + bank "
+             "contention)", cluster_scaling.smoke),
+            ("front diff (committed Pareto-front drift gate)",
+             front_diff.smoke),
         ])
         return
 
-    from . import (calibration, collective_policy, dse, fig3, kernel_bench,
-                   roofline_table, sweep_perf)
+    from . import (calibration, cluster_scaling, collective_policy, dse,
+                   fig3, front_diff, kernel_bench, roofline_table,
+                   sweep_perf)
     _run_sections([
         ("fig3 (paper Fig.3a/b/c via the machine model)", fig3.main),
         ("dse (design-space sweep + Pareto fronts)", dse.main),
@@ -62,6 +68,9 @@ def main(argv=None) -> None:
          sweep_perf.main),
         ("calibration (Pareto-selected operating points vs defaults)",
          calibration.main),
+        ("cluster scaling (weak/strong 1-8 cores + bank contention)",
+         cluster_scaling.main),
+        ("front diff (committed Pareto-front drift gate)", front_diff.main),
         ("kernels (interpret-mode micro-bench)", kernel_bench.main),
         ("collective policy (bulk vs ring)", collective_policy.main),
         ("roofline (from dry-run artifacts)", roofline_table.main),

@@ -15,6 +15,19 @@ Usage (defaults sweep 288 configurations: 6 kernels x 3 policies x
         --depths 1,2,4,8,16 --latencies 1,2,4 --unrolls 4,8 \
         --n-samples 64 --workers 2 --out-dir artifacts/dse
 
+Cluster axes (``core.cluster``): ``--cores`` sweeps Snitch-cluster core
+counts (the kernel is work-partitioned into disjoint per-core sample
+ranges; ``n_samples`` must divide evenly) and ``--banks`` sweeps TCDM bank
+counts ('inf' = conflict-free).  Cluster records report aggregate IPC /
+throughput over the makespan, per-core IPC, energy including interconnect
+energy, and the ``*_bank`` stall cause.  ``--cores 1`` with ``--banks inf``
+is bit-identical to the single-PE machine — the contract
+``tests/test_cluster.py`` gates differentially:
+
+    PYTHONPATH=src python examples/explore.py \
+        --kernels poly_lcg,histf --policies copiftv2 \
+        --cores 1,2,4 --banks inf,8,2
+
 ``--engine`` picks the simulation core: ``event`` (default) is the
 event-driven time-skip engine — bit-identical to ``cycle`` (the naive
 per-cycle reference stepper) but skips fully-stalled stretches, so big
@@ -71,8 +84,10 @@ def _ints(s):
 
 
 def _opt_ints(s):
-    """Comma list where '-' (or 'none') means the symmetric default."""
-    return tuple(None if x in ("-", "none") else int(x)
+    """Comma list where '-'/'none'/'inf' means the None sentinel (symmetric
+    queue depth, or the conflict-free bank count).  Prefer the word forms on
+    the command line: a leading '-' needs ``--flag=-,8`` argparse syntax."""
+    return tuple(None if x in ("-", "none", "inf") else int(x)
                  for x in s.split(",") if x)
 
 
@@ -159,6 +174,14 @@ def main(argv=None) -> int:
     ap.add_argument("--depths-f2i", type=_opt_ints, default=(None,),
                     help="asymmetric F2I depth overrides (comma list; "
                          "'-' = symmetric)")
+    ap.add_argument("--cores", type=_ints, default=(1,),
+                    help="cluster core counts to sweep (work-partitioned "
+                         "disjoint sample ranges; n-samples must divide "
+                         "evenly; 1 = the single-PE machine, bit-identical "
+                         "to the plain stepper)")
+    ap.add_argument("--banks", type=_opt_ints, default=(None,),
+                    help="TCDM bank counts to sweep (comma list; 'inf' = "
+                         "conflict-free/infinite banks)")
     ap.add_argument("--n-samples", type=int, default=32)
     ap.add_argument("--workers", type=int, default=None,
                     help="process-pool width (0/1 = serial)")
@@ -174,7 +197,8 @@ def main(argv=None) -> int:
     pts = grid(kernels=kernels, policies=policies, queue_depths=args.depths,
                queue_latencies=args.latencies, unrolls=args.unrolls,
                n_samples=args.n_samples, engine=args.engine,
-               i2f_depths=args.depths_i2f, f2i_depths=args.depths_f2i)
+               i2f_depths=args.depths_i2f, f2i_depths=args.depths_f2i,
+               n_cores=args.cores, tcdm_banks=args.banks)
     if not pts:
         ap.error("empty sweep grid: every axis needs at least one value")
     workers = resolve_workers(len(pts), args.workers)
@@ -182,7 +206,8 @@ def main(argv=None) -> int:
           f"({len(kernels) if kernels else len(KERNELS)} kernels x "
           f"{len(policies) if policies else len(ExecutionPolicy)} policies x "
           f"{len(args.depths)} depths x {len(args.latencies)} latencies x "
-          f"{len(args.unrolls)} unrolls; n_samples={args.n_samples}) "
+          f"{len(args.unrolls)} unrolls x {len(args.cores)} core-counts x "
+          f"{len(args.banks)} bank-geometries; n_samples={args.n_samples}) "
           f"[engine={args.engine}, workers={workers}] ...")
     t0 = time.time()
     recs = run_sweep(pts, workers=args.workers)

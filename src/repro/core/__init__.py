@@ -4,6 +4,8 @@ engine sweeping (kernel x policy x queue geometry x unroll) grids with
 Pareto-front extraction, plus the ExecutionPolicy enum that threads the
 dual-stream idea through the TPU layers of the framework."""
 from .bench_kernels import KERNELS
+from .cluster import (ClusterConfig, ClusterResult, ClusterStepper,
+                      simulate_cluster)
 from .dfg import LoopDFG, Node, s
 from .isa import Instr, OpKind, Queue, Unit
 from .machine import (ENGINES, DeadlockError, MachineConfig, Program,
@@ -19,13 +21,14 @@ from .pareto import (dominates, format_front, pareto_by_kernel, pareto_front,
                      read_csv, write_csv)
 from .policy import (WORKLOAD_PROXIES, ExecutionPolicy, OperatingPoint,
                      PolicyTable, clear_policy_table_cache, default_table)
-from .sweep import (CSV_FIELDS, SweepPoint, SweepRecord, clear_worker_caches,
-                    grid, partition_points, resolve_workers, run_point,
-                    run_sweep, sweep_summary)
-from .transform import TransformConfig, analyze, lower
+from .sweep import (CSV_FIELDS, LEGACY_CSV_FIELDS, SweepPoint, SweepRecord,
+                    clear_worker_caches, grid, partition_points,
+                    resolve_workers, run_point, run_sweep, sweep_summary)
+from .transform import TransformConfig, analyze, lower, partition_kernel
 
 __all__ = [
     "KERNELS", "LoopDFG", "Node", "s", "Instr", "OpKind", "Queue", "Unit",
+    "ClusterConfig", "ClusterResult", "ClusterStepper", "simulate_cluster",
     "DeadlockError", "ENGINES", "MachineConfig", "Program",
     "ReferenceStepper", "SimResult", "Stepper", "simulate", "stepper_for",
     "PAPER_CLAIMS", "KernelComparison", "best", "geomean",
@@ -37,8 +40,8 @@ __all__ = [
     "select_operating_point", "validate_artifact", "write_artifact",
     "WORKLOAD_PROXIES", "ExecutionPolicy", "OperatingPoint", "PolicyTable",
     "clear_policy_table_cache", "default_table",
-    "TransformConfig", "analyze", "lower",
-    "CSV_FIELDS", "SweepPoint", "SweepRecord", "clear_worker_caches", "grid",
-    "partition_points", "resolve_workers", "run_point", "run_sweep",
-    "sweep_summary",
+    "TransformConfig", "analyze", "lower", "partition_kernel",
+    "CSV_FIELDS", "LEGACY_CSV_FIELDS", "SweepPoint", "SweepRecord",
+    "clear_worker_caches", "grid", "partition_points", "resolve_workers",
+    "run_point", "run_sweep", "sweep_summary",
 ]

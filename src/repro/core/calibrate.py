@@ -41,16 +41,19 @@ from .policy import ExecutionPolicy, OperatingPoint
 from .sweep import SweepRecord, grid, run_sweep
 
 #: bump on any incompatible artifact-layout change; loaders treat a mismatch
-#: as *stale* and fall back to defaults rather than guessing at old layouts
-SCHEMA_VERSION = 1
+#: as *stale* and fall back to defaults rather than guessing at old layouts.
+#: v2: cluster-aware points (n_cores / tcdm_banks / throughput /
+#: ipc_per_core) — PR-1-era single-PE artifacts are stale, consumers fall
+#: back to defaults until recalibrated.
+SCHEMA_VERSION = 2
 
 OBJECTIVES = ("max-ipc", "min-energy", "energy-bounded-ipc")
 
 #: the configuration + measured-metric fields persisted per front point
 POINT_FIELDS = (
     "policy", "queue_depth", "queue_latency", "unroll", "unroll_int",
-    "queue_depth_i2f", "queue_depth_f2i", "ipc", "energy", "cycles",
-    "efficiency",
+    "queue_depth_i2f", "queue_depth_f2i", "n_cores", "tcdm_banks",
+    "ipc", "ipc_per_core", "energy", "cycles", "throughput", "efficiency",
 )
 
 ARTIFACT_FIELDS = ("schema_version", "kernel", "objective", "selected",
@@ -103,7 +106,9 @@ class CalibrationRecord:
             queue_depth=s["queue_depth"], queue_latency=s["queue_latency"],
             unroll=s["unroll"], unroll_int=s["unroll_int"],
             queue_depth_i2f=s["queue_depth_i2f"],
-            queue_depth_f2i=s["queue_depth_f2i"], source="calibrated")
+            queue_depth_f2i=s["queue_depth_f2i"],
+            n_cores=s["n_cores"], tcdm_banks=s["tcdm_banks"],
+            source="calibrated")
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -171,10 +176,11 @@ def validate_artifact(d: Dict[str, Any]) -> None:
 
 def _cheap_hw_key(r: SweepRecord) -> Tuple:
     """Final tie-break: prefer the cheaper hardware/schedule realization —
-    shallower FIFOs, lower visibility latency, smaller unroll."""
+    fewer cores, shallower FIFOs, lower visibility latency, smaller
+    unroll."""
     d_i2f = r.queue_depth_i2f or r.queue_depth
     d_f2i = r.queue_depth_f2i or r.queue_depth
-    return (max(d_i2f, d_f2i), r.queue_latency, r.unroll,
+    return (r.n_cores, max(d_i2f, d_f2i), r.queue_latency, r.unroll,
             r.unroll_int or r.unroll, r.policy)
 
 

@@ -1,0 +1,378 @@
+"""Cluster-scale machine model: N dual-issue PEs sharing a banked TCDM.
+
+The single-PE model (``core.machine``) reproduces the paper's dual-issue
+core; large-scale ML accelerators deploy *many* of them — a Snitch cluster
+couples N cores to a word-interleaved multi-bank TCDM through a single-cycle
+logarithmic interconnect (Zaruba et al., TC'21; Colagrande et al.,
+"Towards Zero-Stall Matrix Multiplication on Energy-Efficient RISC-V
+Clusters").  This module scales the machine model to that shape:
+
+* :class:`ClusterConfig` — cluster geometry: core count, TCDM bank count
+  (``None`` = conflict-free, the ∞-bank idealization), the bank service
+  window (``bank_conflict_penalty``: cycles a bank stays busy per access, 1
+  = fully pipelined single-port SRAM), the per-access interconnect energy,
+  and the per-core :class:`~.machine.MachineConfig`.
+* :class:`ClusterStepper` — advances N per-core steppers (the event-driven
+  :class:`~.machine.Stepper` by default, the naive
+  :class:`~.machine.ReferenceStepper` under ``engine="cycle"``) under a
+  shared bank arbiter.  Host work stays O(total instructions): each core
+  keeps its own event-driven time-skip machinery, and the scheduler always
+  advances the core with the smallest local cycle (ties broken by core
+  index — the deterministic interconnect priority), so every arbiter
+  decision at cycle ``t`` happens after all accesses at cycles ``< t`` and
+  after lower-indexed cores' accesses at ``t``.
+* :class:`ClusterResult` — per-core :class:`~.machine.SimResult` plus the
+  cluster aggregates: makespan cycles, aggregate IPC / throughput, summed
+  energy *including interconnect energy*, merged stall breakdown (with the
+  cluster-only ``*_bank`` causes), and per-core IPC.
+
+Contention model: every TCDM access (``isa.MEM_KINDS``: loads, stores, SSR
+stores) maps to ``crc32(label) % banks`` — a deterministic stand-in for
+address-interleaved bank mapping — and occupies its bank for
+``bank_conflict_penalty`` cycles.  An access finding its bank busy stalls
+its unit with the ``bank`` cause until the bank frees.  Banks only ever get
+*busier* over time, which is what makes the per-core time-skip sound: a
+blocked core that jumped to its computed wake cycle re-checks every issue
+condition there, and no bank can have become free earlier than the core
+assumed.  (The per-unit *exact-wake* skip is disabled under finite banks —
+another core can extend a bank window while a unit waits — so those
+configurations pay a few more host steps; the whole-machine jump, which
+re-checks on wake, is kept.)
+
+The hard contract, enforced by ``tests/test_cluster.py`` differentially
+against :class:`~.machine.Stepper` across the default sweep grid:
+``n_cores=1, tcdm_banks=None`` is **bit-identical** to the single-core
+engine — cycles, energy, stall breakdown, FIFO push/pop sequences,
+occupancy highwater and the functional environment.  A single PE owns its
+scratchpad port (no interconnect energy, no arbiter), so the degenerate
+cluster runs the exact single-core code path.  Contention-free N-core
+clusters additionally equal N independent single-core runs per core.
+
+Engine parity under contention: issue timing, energy, FIFO sequences and
+the environment are identical between ``event`` and ``cycle`` cluster runs
+(bank windows only move later, so a jump target is never early).  The
+*attribution* of bank-blocked cycles can differ when another core extends a
+bank window inside a stretch the event engine already attributed — per-unit
+stall totals still agree, only the cause split within the window may shift.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .isa import BANK_STALL_KEYS, E_TCDM_INTERCONNECT, MEM_KINDS, Queue
+from .machine import (ENGINES, MachineConfig, Program, ReferenceStepper,
+                      SimResult, Stepper)
+from .policy import ExecutionPolicy
+
+
+@dataclass
+class ClusterConfig:
+    """Cluster geometry.  The defaults (one core, conflict-free TCDM) are
+    the degenerate cluster that must match ``core.machine`` bit-for-bit."""
+    n_cores: int = 1
+    #: TCDM bank count; ``None`` models an infinitely-banked (conflict-free)
+    #: scratchpad — the idealization the bit-identity contract pins
+    tcdm_banks: Optional[int] = None
+    #: cycles a bank stays busy per access (1 = pipelined single-port SRAM);
+    #: a conflicting access waits out the remainder of the window
+    bank_conflict_penalty: int = 1
+    #: energy per TCDM access through the shared interconnect; charged only
+    #: when ``n_cores > 1`` (a single PE owns its scratchpad port)
+    interconnect_energy: float = E_TCDM_INTERCONNECT
+    #: per-core machine configuration (queue geometry, latency, ...)
+    machine: MachineConfig = field(default_factory=MachineConfig)
+
+    def __post_init__(self) -> None:
+        if self.n_cores <= 0:
+            raise ValueError(f"n_cores must be positive, got {self.n_cores}")
+        if self.tcdm_banks is not None and self.tcdm_banks <= 0:
+            raise ValueError(
+                f"tcdm_banks must be positive or None, got {self.tcdm_banks}")
+        if self.bank_conflict_penalty < 1:
+            raise ValueError("bank_conflict_penalty must be >= 1")
+
+
+class _Interconnect:
+    """Shared TCDM bank arbiter: per-bank busy-until timestamps.
+
+    ``banks=None`` disables arbitration entirely (conflict-free);
+    ``e_access`` is the per-access interconnect energy (0 for one core).
+    Timestamps only move forward — an acquired window never shrinks — which
+    the per-core time-skip relies on (see the module docstring).
+    """
+    __slots__ = ("banks", "penalty", "e_access", "busy_until")
+
+    def __init__(self, banks: Optional[int], penalty: int, e_access: float):
+        self.banks = banks
+        self.penalty = penalty
+        self.e_access = e_access
+        self.busy_until: Dict[int, int] = {}
+
+    def bank_of(self, label: str) -> int:
+        # deterministic address-hash proxy for word-interleaved bank mapping
+        return zlib.crc32(label.encode()) % self.banks
+
+    def free_at(self, bank: int) -> int:
+        return self.busy_until.get(bank, 0)
+
+    def acquire(self, bank: int, now: int) -> None:
+        self.busy_until[bank] = now + self.penalty
+
+
+class _CoreStepper(Stepper):
+    """One cluster core: the event-driven engine + the shared bank gate.
+
+    With no interconnect pressure (one core, infinite banks) every override
+    below is a no-op pass-through — the degenerate cluster core runs the
+    exact single-core code path, which is the bit-identity contract.
+    """
+
+    def __init__(self, prog: Program, cfg: MachineConfig, ic: _Interconnect):
+        super().__init__(prog, cfg)
+        self._ic = ic
+        #: id(exec_facts) -> bank, for TCDM-touching instructions only
+        self._bank: Dict[int, int] = {}
+        self._mem_ids: set = set()
+        for _u, lst in self.order:
+            for ins in lst:
+                if ins.kind in MEM_KINDS:
+                    self._mem_ids.add(id(ins.exec_facts))
+                    if ic.banks is not None:
+                        self._bank[id(ins.exec_facts)] = ic.bank_of(ins.label)
+        if self._bank:
+            # another core can extend a bank window while a unit waits, so
+            # the per-unit exact-wake skip is unsound here; replace (never
+            # mutate: the skip table is cached on the Program) each row's
+            # skip flags with all-False.  The whole-machine jump re-checks
+            # conditions on wake and stays sound.
+            for row in self._rows:
+                row[2] = [False] * len(row[2])
+
+    # -- bank gate: checked after every single-core issue condition ---------
+
+    def _reason_key(self, f, now: int) -> Optional[str]:
+        key = super()._reason_key(f, now)
+        if key is None and self._bank:
+            b = self._bank.get(id(f))
+            if b is not None and self._ic.free_at(b) > now:
+                return BANK_STALL_KEYS[f[0]]
+        return key
+
+    def _clear_times(self, f) -> Tuple[List[Tuple[str, float]], float]:
+        ev, t_max = super()._clear_times(f)
+        if self._bank:
+            b = self._bank.get(id(f))
+            if b is not None:
+                t = self._ic.free_at(b)
+                ev.append((BANK_STALL_KEYS[f[0]], t))
+                if t > t_max:
+                    t_max = t
+        return ev, t_max
+
+    def _issue(self, f, now: int) -> int:
+        fid = id(f)
+        if fid in self._mem_ids:
+            if self._bank:
+                self._ic.acquire(self._bank[fid], now)
+            self.energy += self._ic.e_access
+        return super()._issue(f, now)
+
+
+class _RefCoreStepper(ReferenceStepper):
+    """Naive per-cycle cluster core — the differential oracle for
+    :class:`_CoreStepper` (``engine="cycle"``), with the same bank gate."""
+
+    def __init__(self, prog: Program, cfg: MachineConfig, ic: _Interconnect):
+        super().__init__(prog, cfg)
+        self._ic = ic
+        self._bank: Dict[int, int] = {}
+        self._mem_ids: set = set()
+        for _u, lst in self.order:
+            for ins in lst:
+                if ins.kind in MEM_KINDS:
+                    self._mem_ids.add(id(ins))
+                    if ic.banks is not None:
+                        self._bank[id(ins)] = ic.bank_of(ins.label)
+
+    def _block_reason(self, ins, now: int) -> Optional[str]:
+        reason = super()._block_reason(ins, now)
+        if reason is None and self._bank:
+            b = self._bank.get(id(ins))
+            if b is not None and self._ic.free_at(b) > now:
+                return "bank"
+        return reason
+
+    def _do_issue(self, ins, now: int) -> int:
+        iid = id(ins)
+        if iid in self._mem_ids:
+            if self._bank:
+                self._ic.acquire(self._bank[iid], now)
+            self.energy += self._ic.e_access
+        return super()._do_issue(ins, now)
+
+
+@dataclass
+class ClusterResult:
+    """Aggregate outcome of one cluster run.  ``cycles`` is the makespan
+    (slowest core); energy is the sum over cores *including* interconnect
+    energy; the per-core :class:`~.machine.SimResult`\\ s keep full detail
+    (env, FIFO sequences) for equivalence checking."""
+    name: str
+    policy: ExecutionPolicy
+    n_cores: int
+    tcdm_banks: Optional[int]
+    cycles: int
+    n_samples: int
+    energy: float
+    core_results: List[SimResult]
+
+    @property
+    def total_instrs(self) -> int:
+        return sum(r.total_instrs for r in self.core_results)
+
+    @property
+    def ipc(self) -> float:
+        """Aggregate IPC over the makespan — up to ``2 * n_cores``."""
+        return self.total_instrs / self.cycles if self.cycles else 0.0
+
+    @property
+    def ipc_per_core(self) -> float:
+        """Mean per-core IPC (each core over its own busy cycles)."""
+        if not self.core_results:
+            return 0.0
+        return sum(r.ipc for r in self.core_results) / len(self.core_results)
+
+    @property
+    def throughput(self) -> float:          # samples / cycle, aggregate
+        return self.n_samples / self.cycles if self.cycles else 0.0
+
+    @property
+    def power(self) -> float:
+        return self.energy / self.cycles if self.cycles else 0.0
+
+    @property
+    def efficiency(self) -> float:          # samples / energy
+        return self.n_samples / self.energy if self.energy else 0.0
+
+    @property
+    def instrs(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.core_results:
+            for k, v in r.instrs.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    @property
+    def stalls(self) -> Dict[str, int]:
+        """Merged stall breakdown; ``*_bank`` keys are the contention."""
+        out: Dict[str, int] = {}
+        for r in self.core_results:
+            for k, v in r.stalls.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    @property
+    def bank_stalls(self) -> int:
+        return sum(v for k, v in self.stalls.items() if k.endswith("_bank"))
+
+    @property
+    def max_queue_occupancy(self) -> Dict[Queue, int]:
+        out = {q: 0 for q in Queue}
+        for r in self.core_results:
+            for q, v in r.max_queue_occupancy.items():
+                if v > out[q]:
+                    out[q] = v
+        return out
+
+    @property
+    def fifo_violations(self) -> int:
+        return sum(len(r.fifo_violations) for r in self.core_results)
+
+    def summary(self) -> Dict[str, object]:
+        """Primitive-typed record mirroring ``SimResult.summary`` with the
+        cluster aggregates added."""
+        return {
+            "name": self.name,
+            "policy": self.policy.value,
+            "n_cores": self.n_cores,
+            "tcdm_banks": self.tcdm_banks,
+            "cycles": self.cycles,
+            "n_samples": self.n_samples,
+            "instrs_int": self.instrs.get("int", 0),
+            "instrs_fp": self.instrs.get("fp", 0),
+            "ipc": self.ipc,
+            "ipc_per_core": self.ipc_per_core,
+            "energy": self.energy,
+            "power": self.power,
+            "throughput": self.throughput,
+            "efficiency": self.efficiency,
+            "max_occ_i2f": self.max_queue_occupancy.get(Queue.I2F, 0),
+            "max_occ_f2i": self.max_queue_occupancy.get(Queue.F2I, 0),
+            "fifo_violations": self.fifo_violations,
+            "bank_stalls": self.bank_stalls,
+            "stalls": dict(self.stalls),
+        }
+
+
+class ClusterStepper:
+    """Advance N per-core steppers under the shared TCDM arbiter.
+
+    ``progs`` are the per-core programs (``transform.partition_kernel``
+    output, or any list of independent Programs — one per core).  The
+    scheduler always steps the core with the smallest local cycle, ties
+    broken by core index (core 0 has interconnect priority), which makes
+    the contention semantics deterministic and engine-independent.
+    """
+
+    def __init__(self, progs: Sequence[Program],
+                 cfg: Optional[ClusterConfig] = None,
+                 engine: str = "event"):
+        progs = list(progs)
+        cfg = cfg or ClusterConfig(n_cores=len(progs))
+        if len(progs) != cfg.n_cores:
+            raise ValueError(
+                f"got {len(progs)} per-core programs for n_cores={cfg.n_cores}")
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r} (have {ENGINES})")
+        self.cfg = cfg
+        self.interconnect = _Interconnect(
+            banks=cfg.tcdm_banks, penalty=cfg.bank_conflict_penalty,
+            e_access=cfg.interconnect_energy if cfg.n_cores > 1 else 0.0)
+        core_cls = _CoreStepper if engine == "event" else _RefCoreStepper
+        self.cores = [core_cls(p, cfg.machine, self.interconnect)
+                      for p in progs]
+
+    def run(self) -> ClusterResult:
+        cores = self.cores
+        live = list(range(len(cores)))
+        while live:
+            # global-time-ordered advance: the min-cycle core acts next, so
+            # every arbiter decision at cycle t already saw all accesses at
+            # cycles < t and lower-indexed cores' accesses at t
+            c = min(live, key=lambda i: (cores[i].cycle, i))
+            if not cores[c].step():
+                live.remove(c)
+        return self.result()
+
+    def result(self) -> ClusterResult:
+        results = [c.result() for c in self.cores]
+        prog0 = self.cores[0].prog
+        return ClusterResult(
+            name=prog0.name.split("@core")[0],
+            policy=prog0.policy,
+            n_cores=self.cfg.n_cores,
+            tcdm_banks=self.cfg.tcdm_banks,
+            cycles=max((r.cycles for r in results), default=0),
+            n_samples=sum(r.n_samples for r in results),
+            energy=sum(r.energy for r in results),
+            core_results=results,
+        )
+
+
+def simulate_cluster(progs: Sequence[Program],
+                     cfg: Optional[ClusterConfig] = None,
+                     engine: str = "event") -> ClusterResult:
+    """One-shot convenience entry point, mirroring ``machine.simulate``."""
+    return ClusterStepper(progs, cfg, engine).run()

@@ -82,6 +82,10 @@ OP_TABLE: dict[OpKind, OpSpec] = {
 INT_DST_FP_KINDS = frozenset({OpKind.CVT_F2I, OpKind.FMV_PUSH})
 #: Kinds executed on the FPSS.
 FP_KINDS = frozenset(k for k, s in OP_TABLE.items() if s.unit is Unit.FP)
+#: Kinds that touch the TCDM (loads/stores, SSR-backed stores) — the accesses
+#: a shared-memory cluster arbitrates over banks (``core.cluster``).
+MEM_KINDS = frozenset({OpKind.LW, OpKind.SW, OpKind.FLD, OpKind.FSD,
+                       OpKind.FSD_SSR})
 
 # --- Energy model knobs (relative units) -----------------------------------
 #: extra energy for a queue push or pop (lightweight FIFO access)
@@ -98,6 +102,11 @@ E_FETCH_FREP = 0.2
 #: so the published COPIFT/COPIFTv2 energy-efficiency ratios are reproduced
 #: (DESIGN.md §3.1 — we report energy *ratios* only).
 E_STATIC_PER_CYCLE = 22.0
+#: energy per TCDM access crossing the cluster's shared interconnect (the
+#: log-depth crossbar between N cores and the banked TCDM).  Charged only in
+#: multi-core clusters (``core.cluster``): a single PE owns its scratchpad
+#: port, so the ``n_cores=1`` machine stays bit-identical to ``machine``.
+E_TCDM_INTERCONNECT = 0.9
 
 
 class Queue(enum.Enum):
@@ -107,12 +116,16 @@ class Queue(enum.Enum):
 
 #: pre-interned per-unit stall-counter keys (``"<unit>_<cause>"``), so the
 #: simulator hot path never string-formats; causes mirror
-#: ``machine.STALL_CAUSES`` plus the unit-busy check.
+#: ``machine.STALL_CAUSES`` plus the unit-busy check.  ``bank`` is the
+#: cluster-only cause (TCDM bank busy, ``core.cluster``).
 _STALL_KEYS = {
     u.value: {c: f"{u.value}_{c}"
-              for c in ("busy", "dep", "queue_empty", "queue_full")}
+              for c in ("busy", "dep", "queue_empty", "queue_full", "bank")}
     for u in Unit
 }
+
+#: per-unit stall key for a TCDM bank conflict (``core.cluster``)
+BANK_STALL_KEYS = {u: _STALL_KEYS[u.value]["bank"] for u in Unit}
 
 #: dense indices for the hot-path list layouts (enum-keyed dicts hash the
 #: member on every access; a list index does not)

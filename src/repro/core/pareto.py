@@ -14,7 +14,8 @@ import operator
 from typing import Dict, Iterable, List, Sequence, TextIO, Union
 
 from .metrics import group_by
-from .sweep import CSV_FIELDS, SweepRecord, record_to_row
+from .sweep import (CSV_FIELDS, LEGACY_CSV_FIELDS, SweepRecord,
+                    record_to_row)
 
 
 def dominates(a: SweepRecord, b: SweepRecord,
@@ -84,23 +85,32 @@ def _parse_stalls(packed: str) -> Dict[str, int]:
 
 
 #: per-column parsers for :func:`read_csv`; ``None``-able ints map "" back
-_OPT_INT = ("unroll_int", "queue_depth_i2f", "queue_depth_f2i")
+_OPT_INT = ("unroll_int", "queue_depth_i2f", "queue_depth_f2i", "tcdm_banks")
 _INT = ("queue_depth", "queue_latency", "unroll", "n_samples", "cycles",
         "instrs_int", "instrs_fp", "max_occ_i2f", "max_occ_f2i",
-        "fifo_violations")
-_FLOAT = ("ipc", "energy", "power", "throughput", "efficiency")
+        "fifo_violations", "n_cores", "bank_stalls")
+_FLOAT = ("ipc", "energy", "power", "throughput", "efficiency",
+          "ipc_per_core")
 
 
 def row_to_record(row: Dict[str, str]) -> SweepRecord:
     """Inverse of ``sweep.record_to_row`` — exact for every field (floats
-    survive because ``str(float)`` is repr-round-trippable)."""
+    survive because ``str(float)`` is repr-round-trippable).
+
+    Rows from PR-2-era CSVs (no cluster columns) parse too: absent cluster
+    fields default to the single-PE machine (``n_cores=1``, conflict-free
+    TCDM, per-core IPC == aggregate IPC)."""
     kw: Dict[str, object] = dict(row)
+    kw.setdefault("n_cores", "1")
+    kw.setdefault("tcdm_banks", "")
+    kw.setdefault("bank_stalls", "0")
+    kw.setdefault("ipc_per_core", row.get("ipc", "0.0"))
     for f in _INT:
-        kw[f] = int(row[f])
+        kw[f] = int(kw[f])
     for f in _OPT_INT:
-        kw[f] = int(row[f]) if row[f] != "" else None
+        kw[f] = int(kw[f]) if kw[f] != "" else None
     for f in _FLOAT:
-        kw[f] = float(row[f])
+        kw[f] = float(kw[f])
     kw["equivalent"] = bool(int(row["equivalent"]))
     kw["stalls"] = _parse_stalls(row["stalls"])
     return SweepRecord(**kw)     # type: ignore[arg-type]
@@ -108,12 +118,16 @@ def row_to_record(row: Dict[str, str]) -> SweepRecord:
 
 def read_csv(src: Union[str, TextIO]) -> List[SweepRecord]:
     """Re-parse a :func:`write_csv` emission back into sweep records; the
-    round trip is lossless (tested in ``tests/test_calibration.py``)."""
+    round trip is lossless (tested in ``tests/test_calibration.py``).
+    Accepts the current header and the PR-2-era one without the cluster
+    columns (those records come back with ``n_cores=1`` defaults)."""
     def _load(fh: TextIO) -> List[SweepRecord]:
         reader = csv.DictReader(fh)
-        if tuple(reader.fieldnames or ()) != CSV_FIELDS:
+        header = tuple(reader.fieldnames or ())
+        if header not in (CSV_FIELDS, LEGACY_CSV_FIELDS):
             raise ValueError(
-                f"CSV header {reader.fieldnames} != expected {CSV_FIELDS}")
+                f"CSV header {reader.fieldnames} != expected {CSV_FIELDS} "
+                f"(or the legacy pre-cluster layout)")
         return [row_to_record(row) for row in reader]
 
     if isinstance(src, str):
@@ -125,10 +139,13 @@ def read_csv(src: Union[str, TextIO]) -> List[SweepRecord]:
 def format_front(front: Sequence[SweepRecord]) -> str:
     """Human-readable table for one kernel's Pareto front."""
     hdr = (f"{'policy':<10} {'depth':>5} {'lat':>3} {'unroll':>6} "
+           f"{'cores':>5} {'banks':>5} "
            f"{'ipc':>6} {'energy':>10} {'cycles':>7} {'eff':>9}")
     lines = [hdr, "-" * len(hdr)]
     for r in front:
+        banks = "-" if r.tcdm_banks is None else r.tcdm_banks
         lines.append(f"{r.policy:<10} {r.queue_depth:>5} {r.queue_latency:>3} "
-                     f"{r.unroll:>6} {r.ipc:>6.3f} {r.energy:>10.1f} "
+                     f"{r.unroll:>6} {r.n_cores:>5} {banks:>5} "
+                     f"{r.ipc:>6.3f} {r.energy:>10.1f} "
                      f"{r.cycles:>7} {r.efficiency:>9.2e}")
     return "\n".join(lines)

@@ -61,6 +61,11 @@ class OperatingPoint:
     unroll_int: Optional[int] = None
     queue_depth_i2f: Optional[int] = None
     queue_depth_f2i: Optional[int] = None
+    #: cluster geometry (``core.cluster``): PEs sharing the TCDM and the
+    #: bank count (None = conflict-free).  The paper's headline point is a
+    #: single PE; cluster-level calibration artifacts populate these.
+    n_cores: int = 1
+    tcdm_banks: Optional[int] = None
     source: str = "default"
 
     def effective_depths(self) -> "tuple[int, int]":

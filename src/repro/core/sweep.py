@@ -36,11 +36,12 @@ from dataclasses import asdict, dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .bench_kernels import KERNELS
+from .cluster import ClusterConfig, ClusterStepper
 from .isa import Queue
 from .machine import DeadlockError, ENGINES, MachineConfig, stepper_for
 from .metrics import best, geomean, group_by
 from .policy import ExecutionPolicy
-from .transform import TransformConfig, lower
+from .transform import TransformConfig, lower, partition_kernel
 
 
 @dataclass(frozen=True)
@@ -61,10 +62,19 @@ class SweepPoint:
     #: on the looser one.
     queue_depth_i2f: Optional[int] = None
     queue_depth_f2i: Optional[int] = None
+    #: cluster geometry (``core.cluster``): cores sharing the TCDM, and the
+    #: bank count (None = conflict-free).  ``n_cores=1, tcdm_banks=None`` is
+    #: the single-PE machine, bit-identical to the plain stepper.
+    n_cores: int = 1
+    tcdm_banks: Optional[int] = None
 
     def effective_depths(self) -> Tuple[int, int]:
         return (self.queue_depth_i2f or self.queue_depth,
                 self.queue_depth_f2i or self.queue_depth)
+
+    @property
+    def clustered(self) -> bool:
+        return self.n_cores > 1 or self.tcdm_banks is not None
 
 
 @dataclass
@@ -94,6 +104,14 @@ class SweepRecord:
     engine: str = "event"
     queue_depth_i2f: Optional[int] = None
     queue_depth_f2i: Optional[int] = None
+    #: cluster columns (PR-5): core count, TCDM banks (None = conflict-free),
+    #: mean per-core IPC (== ipc on one core; ``ipc`` itself is the cluster
+    #: aggregate over the makespan, up to 2*n_cores), and the total cycles
+    #: lost to bank conflicts
+    n_cores: int = 1
+    tcdm_banks: Optional[int] = None
+    ipc_per_core: float = 0.0
+    bank_stalls: int = 0
     stalls: Dict[str, int] = field(default_factory=dict)
 
     @property
@@ -107,8 +125,15 @@ CSV_FIELDS: Tuple[str, ...] = (
     "n_samples", "status", "cycles", "ipc", "energy", "power", "throughput",
     "efficiency", "instrs_int", "instrs_fp", "max_occ_i2f", "max_occ_f2i",
     "fifo_violations", "equivalent", "engine", "queue_depth_i2f",
-    "queue_depth_f2i", "stalls", "detail",
+    "queue_depth_f2i", "n_cores", "tcdm_banks", "ipc_per_core", "bank_stalls",
+    "stalls", "detail",
 )
+
+#: the PR-2/PR-3-era column set (no cluster axes); ``core.pareto.read_csv``
+#: still accepts it, defaulting the cluster columns (n_cores=1)
+LEGACY_CSV_FIELDS: Tuple[str, ...] = tuple(
+    f for f in CSV_FIELDS
+    if f not in ("n_cores", "tcdm_banks", "ipc_per_core", "bank_stalls"))
 
 
 def grid(kernels: Optional[Sequence[str]] = None,
@@ -120,12 +145,18 @@ def grid(kernels: Optional[Sequence[str]] = None,
          n_samples: int = 64,
          engine: str = "event",
          i2f_depths: Sequence[Optional[int]] = (None,),
-         f2i_depths: Sequence[Optional[int]] = (None,)) -> List[SweepPoint]:
+         f2i_depths: Sequence[Optional[int]] = (None,),
+         n_cores: Sequence[int] = (1,),
+         tcdm_banks: Sequence[Optional[int]] = (None,)) -> List[SweepPoint]:
     """Enumerate the cartesian configuration grid as sweep points.
 
     ``i2f_depths``/``f2i_depths`` add asymmetric FIFO geometries: each non-
     None value overrides that queue's depth while ``queue_depths`` keeps
-    supplying the symmetric base (and the other queue's depth)."""
+    supplying the symmetric base (and the other queue's depth).
+
+    ``n_cores``/``tcdm_banks`` are the cluster axes (``core.cluster``):
+    core counts sharing the TCDM and bank counts (None = conflict-free).
+    The defaults keep every existing grid a single-PE grid."""
     ks = list(kernels) if kernels else sorted(KERNELS)
     ps = list(policies) if policies else list(ExecutionPolicy)
     unknown = [k for k in ks if k not in KERNELS]
@@ -133,14 +164,20 @@ def grid(kernels: Optional[Sequence[str]] = None,
         raise KeyError(f"unknown kernels: {unknown} (have {sorted(KERNELS)})")
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r} (have {ENGINES})")
+    if any(nc < 1 for nc in n_cores):
+        raise ValueError(f"n_cores axis must be positive: {tuple(n_cores)}")
+    if any(nb is not None and nb < 1 for nb in tcdm_banks):
+        raise ValueError(
+            f"tcdm_banks axis must be positive or None: {tuple(tcdm_banks)}")
     return [
         SweepPoint(kernel=k, policy=ExecutionPolicy.parse(p).value,
                    queue_depth=d, queue_latency=lat, unroll=u, unroll_int=ui,
                    n_samples=n_samples, engine=engine,
-                   queue_depth_i2f=di, queue_depth_f2i=df)
-        for k, p, d, lat, u, ui, di, df in itertools.product(
+                   queue_depth_i2f=di, queue_depth_f2i=df,
+                   n_cores=nc, tcdm_banks=nb)
+        for k, p, d, lat, u, ui, di, df, nc, nb in itertools.product(
             ks, ps, queue_depths, queue_latencies, unrolls, unroll_ints,
-            i2f_depths, f2i_depths)
+            i2f_depths, f2i_depths, n_cores, tcdm_banks)
     ]
 
 
@@ -164,9 +201,11 @@ def _tcfg_for(pt: SweepPoint) -> TransformConfig:
 def _lower_key(pt: SweepPoint) -> Tuple:
     """The transform-relevant fields of a point (see
     ``TransformConfig.lowering_key``): ``queue_latency`` never matters, and
-    ``queue_depth`` only matters for depth-sensitive policies."""
+    ``queue_depth`` only matters for depth-sensitive policies.  ``n_cores``
+    shapes the partitioned per-core programs; ``tcdm_banks`` is purely a
+    runtime (machine) property."""
     policy = ExecutionPolicy.parse(pt.policy)
-    return (pt.kernel,) + _tcfg_for(pt).lowering_key(policy)
+    return (pt.kernel, pt.n_cores) + _tcfg_for(pt).lowering_key(policy)
 
 
 @functools.lru_cache(maxsize=64)
@@ -182,12 +221,24 @@ def _reference_cached(kernel: str, n_samples: int):
     return KERNELS[kernel].eval_reference(n_samples)
 
 
+@functools.lru_cache(maxsize=64)
+def _partition_cached(kernel: str, policy_value: str, tcfg: TransformConfig,
+                      n_cores: int) -> Tuple:
+    """Memoized ``partition_kernel()`` (the cluster analogue of
+    ``_lower_cached``); raises ValueError exactly like the uncached call."""
+    return tuple(partition_kernel(KERNELS[kernel],
+                                  ExecutionPolicy.parse(policy_value),
+                                  tcfg, n_cores))
+
+
 def clear_worker_caches() -> None:
     """Drop this process's lowering/reference memos (benchmark hygiene)."""
     from . import transform
     _lower_cached.cache_clear()
     _reference_cached.cache_clear()
+    _partition_cached.cache_clear()
     transform._V2_PREFIX_CACHE.clear()
+    transform._PARTITION_CACHE.clear()
 
 
 def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
@@ -200,12 +251,28 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
     """
     dfg = KERNELS[pt.kernel]
     policy = ExecutionPolicy.parse(pt.policy)
+    if pt.n_cores < 1 or (pt.tcdm_banks is not None and pt.tcdm_banks < 1):
+        # a malformed cluster geometry must yield one rejected record, not a
+        # raw traceback killing a pool worker (and an n_cores=0 point must
+        # never masquerade as a cheap single-PE run in a calibration sweep)
+        return SweepRecord(
+            kernel=pt.kernel, policy=policy.value,
+            queue_depth=pt.queue_depth, queue_latency=pt.queue_latency,
+            unroll=pt.unroll, unroll_int=pt.unroll_int,
+            n_samples=pt.n_samples, engine=pt.engine,
+            queue_depth_i2f=pt.queue_depth_i2f,
+            queue_depth_f2i=pt.queue_depth_f2i,
+            n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
+            status="rejected",
+            detail=f"invalid cluster geometry: n_cores={pt.n_cores}, "
+                   f"tcdm_banks={pt.tcdm_banks}")
     base = dict(kernel=pt.kernel, policy=policy.value,
                 queue_depth=pt.queue_depth, queue_latency=pt.queue_latency,
                 unroll=pt.unroll, unroll_int=pt.unroll_int,
                 n_samples=pt.n_samples, engine=pt.engine,
                 queue_depth_i2f=pt.queue_depth_i2f,
-                queue_depth_f2i=pt.queue_depth_f2i)
+                queue_depth_f2i=pt.queue_depth_f2i,
+                n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks)
     tcfg = _tcfg_for(pt)
     if policy not in TransformConfig.DEPTH_SENSITIVE_POLICIES:
         # depth is not transform-relevant here: normalize it out of the memo
@@ -219,6 +286,9 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
                                        if (pt.queue_depth_i2f is not None or
                                            pt.queue_depth_f2i is not None)
                                        else None))
+    if pt.clustered:
+        return _run_cluster_point(pt, dfg, policy, base, tcfg, mcfg,
+                                  use_caches)
     try:
         if use_caches:
             prog = _lower_cached(pt.kernel, policy.value, tcfg)
@@ -243,7 +313,50 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
         efficiency=s["efficiency"], instrs_int=s["instrs_int"],
         instrs_fp=s["instrs_fp"], max_occ_i2f=s["max_occ_i2f"],
         max_occ_f2i=s["max_occ_f2i"], fifo_violations=s["fifo_violations"],
-        equivalent=equivalent, stalls=s["stalls"])
+        equivalent=equivalent, ipc_per_core=s["ipc"], stalls=s["stalls"])
+
+
+def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
+                       base: Dict, tcfg: TransformConfig,
+                       mcfg: MachineConfig,
+                       use_caches: bool) -> SweepRecord:
+    """The cluster leg of :func:`run_point`: partition the kernel across
+    ``pt.n_cores``, run the per-core programs under the shared bank arbiter,
+    and check the *concatenated* per-core outputs against the sequential
+    interpreter (disjoint sample ranges: core ``c`` owns samples
+    ``[c*chunk, (c+1)*chunk)``)."""
+    try:
+        if use_caches:
+            progs = _partition_cached(pt.kernel, policy.value, tcfg,
+                                      pt.n_cores)
+        else:
+            progs = partition_kernel(dfg, policy, tcfg, pt.n_cores,
+                                     use_prefix_cache=False)
+    except ValueError as e:
+        return SweepRecord(**base, status="rejected", detail=str(e))
+    ccfg = ClusterConfig(n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
+                         machine=mcfg)
+    try:
+        res = ClusterStepper(progs, ccfg, engine=pt.engine).run()
+    except DeadlockError as e:
+        return SweepRecord(**base, status="deadlock", detail=str(e))
+    ref = (_reference_cached(pt.kernel, pt.n_samples) if use_caches
+           else dfg.eval_reference(pt.n_samples))
+    chunk = pt.n_samples // pt.n_cores
+    equivalent = all(
+        [core.env.get(f"{node.name}@{i}") for i in range(chunk)]
+        == ref[node.name][c * chunk:(c + 1) * chunk]
+        for node in dfg.outputs()
+        for c, core in enumerate(res.core_results))
+    s = res.summary()
+    return SweepRecord(
+        **base, status="ok", cycles=s["cycles"], ipc=s["ipc"],
+        energy=s["energy"], power=s["power"], throughput=s["throughput"],
+        efficiency=s["efficiency"], instrs_int=s["instrs_int"],
+        instrs_fp=s["instrs_fp"], max_occ_i2f=s["max_occ_i2f"],
+        max_occ_f2i=s["max_occ_f2i"], fifo_violations=s["fifo_violations"],
+        equivalent=equivalent, ipc_per_core=s["ipc_per_core"],
+        bank_stalls=s["bank_stalls"], stalls=s["stalls"])
 
 
 def partition_points(points: Sequence[SweepPoint],

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import itertools
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Dict, List, Optional, Tuple
 
 from .dfg import LoopDFG, Node
@@ -868,6 +868,112 @@ def _with_extra_deps(ins: Instr, extra: Tuple[str, ...]) -> Instr:
                  srcs=tuple(extra) + ins.srcs, dst=ins.dst, pushes=ins.pushes,
                  push_val=ins.push_val, sample=ins.sample, fn=wrapped,
                  extra_energy=ins.extra_energy)
+
+
+# ---------------------------------------------------------------------------
+# Work partitioning: one kernel across the cores of a cluster
+# ---------------------------------------------------------------------------
+
+def _fast_forward_init(dfg: LoopDFG, offset: int) -> Dict[str, Any]:
+    """The lag-carried machine state after ``offset`` sequential samples —
+    what a core's registers hold when its sample range starts at ``offset``.
+
+    Kernels with loop-carried chains (LCG state, running accumulators,
+    address counters) cannot be split by naive index offsetting: core ``c``
+    must start from the state the chain reaches at its range boundary, the
+    same way production partitioned loops seed per-chunk state (LCG
+    skip-ahead, per-chunk base addresses, partial-sum registers).  Evaluated
+    with the sequential reference semantics, so the concatenated per-core
+    outputs stay bit-identical to the unpartitioned kernel.
+    """
+    lags = [lag for n in dfg.nodes for (_s, lag) in n.srcs if lag > 0]
+    if not lags or offset == 0:
+        return dict(dfg.init)
+    if max(lags) > 1:
+        raise ValueError(
+            f"{dfg.name}: work partitioning supports loop-carried lag 1 only "
+            f"(got lag {max(lags)}); restructure the kernel")
+    lagged = {s for n in dfg.nodes for (s, lag) in n.srcs if lag > 0}
+    state = dict(dfg.init)
+    for i in range(offset):
+        cur = {name: gen(i) for name, gen in dfg.inputs.items()}
+        for node in dfg.nodes:
+            args = [cur[s] if lag == 0 else state[s]
+                    for (s, lag) in node.srcs]
+            cur[node.name] = node.fn(*args)
+        for name in lagged | set(state):
+            if name in cur:
+                state[name] = cur[name]
+    return state
+
+
+def _shifted_dfg(dfg: LoopDFG, offset: int, tag: str) -> LoopDFG:
+    """A view of ``dfg`` whose sample ``i`` is the base kernel's sample
+    ``i + offset``: streamed inputs are index-shifted and lag-carried init
+    values are fast-forwarded to the range start."""
+    inputs = {name: (lambda i, _g=gen, _o=offset: _g(i + _o))
+              for name, gen in dfg.inputs.items()}
+    return LoopDFG(name=f"{dfg.name}{tag}", nodes=list(dfg.nodes),
+                   inputs=inputs, input_homes=dict(dfg.input_homes),
+                   init=_fast_forward_init(dfg, offset))
+
+
+#: process-local cache of shifted per-core DFG views, keyed by
+#: (kernel name, n_cores, chunk, core index) with the base-DFG identity
+#: checked on hit (exactly like _V2_PREFIX_CACHE): repeated cluster sweeps
+#: over machine axes then reuse one shifted DFG per core, which is what lets
+#: the COPIFTv2 prefix cache hit across queue depths for partitioned runs.
+_PARTITION_CACHE: Dict[Tuple, List] = {}
+_PARTITION_CAP = 256
+
+
+def _core_dfg(dfg: LoopDFG, c: int, n_cores: int, chunk: int) -> LoopDFG:
+    key = (dfg.name, n_cores, chunk, c)
+    hit = _PARTITION_CACHE.get(key)
+    if hit is not None and hit[0] is dfg:
+        return hit[1]
+    sub = _shifted_dfg(dfg, c * chunk, f"@core{c}/{n_cores}")
+    if len(_PARTITION_CACHE) >= _PARTITION_CAP:
+        _PARTITION_CACHE.pop(next(iter(_PARTITION_CACHE)))
+    _PARTITION_CACHE[key] = [dfg, sub]
+    return sub
+
+
+def partition_kernel(dfg: LoopDFG, policy: "ExecutionPolicy",
+                     cfg: Optional[TransformConfig] = None,
+                     n_cores: int = 1,
+                     use_prefix_cache: bool = True) -> List[Program]:
+    """Split ``cfg.n_samples`` across ``n_cores`` disjoint contiguous sample
+    ranges and lower one per-core :class:`Program` each (same policy, same
+    schedule parameters, ``n_samples / n_cores`` samples per core).
+
+    Core ``c`` computes samples ``[c*chunk, (c+1)*chunk)``: inputs are
+    index-shifted and loop-carried state is fast-forwarded to the range
+    start, so the concatenation of the per-core outputs is bit-identical to
+    the sequential reference.  ``n_cores=1`` returns ``[lower(...)]``
+    verbatim — the cluster of one *is* the single-core program (the
+    ``ClusterStepper`` bit-identity contract rests on this).
+
+    Raises ``ValueError`` when the kernel cannot be partitioned
+    (``n_samples`` not divisible by ``n_cores``, or loop-carried lag > 1).
+    """
+    cfg = cfg or TransformConfig()
+    if n_cores <= 0:
+        raise ValueError(f"n_cores must be positive, got {n_cores}")
+    if n_cores == 1:
+        return [lower(dfg, policy, cfg, use_prefix_cache)]
+    n = cfg.n_samples
+    if n % n_cores:
+        raise ValueError(
+            f"{dfg.name}: n_samples={n} not divisible by n_cores={n_cores}")
+    chunk = n // n_cores
+    batch = min(cfg.batch, chunk)
+    while chunk % batch:              # COPIFT needs batch | n_samples
+        batch -= 1
+    sub_cfg = replace(cfg, n_samples=chunk, batch=batch)
+    return [lower(_core_dfg(dfg, c, n_cores, chunk), policy, sub_cfg,
+                  use_prefix_cache)
+            for c in range(n_cores)]
 
 
 # ---------------------------------------------------------------------------

@@ -46,9 +46,23 @@ def _ns(mesh: Mesh, tree):
         is_leaf=lambda x: isinstance(x, P))
 
 
-def default_runconfig(shape: ShapeConfig, policy: str = "copiftv2",
+def resolved_operating_point(shape: ShapeConfig):
+    """The cell's machine-model operating point — cluster geometry included
+    — from the calibration-backed :class:`~repro.core.policy.PolicyTable`
+    (``REPRO_CALIBRATION_DIR`` honoured): training shapes resolve the
+    ``train`` workload, prefill/decode the ``serve`` one.  The dry-run cost
+    model no longer implicitly assumes one PE; the resolved point is
+    embedded in every cell artifact (``machine_model`` block)."""
+    from ..core.policy import default_table
+    workload = "train" if shape.mode == "train" else "serve"
+    return default_table().resolve(workload)
+
+
+def default_runconfig(shape: ShapeConfig, policy: Optional[str] = None,
                       analysis: bool = False) -> RunConfig:
     from ..core.policy import ExecutionPolicy
+    if policy is None:        # calibrated table point; explicit string wins
+        policy = resolved_operating_point(shape).policy.value
     return RunConfig(policy=ExecutionPolicy.parse(policy),
                      dtype="bfloat16",
                      param_dtype="float32" if shape.mode == "train" else "bfloat16",
@@ -210,12 +224,34 @@ def analytic_device_bytes(cfg: ModelConfig, shape: ShapeConfig,
     return out
 
 
+def cell_tag(arch: str, shape_name: str, multi_pod: bool,
+             policy: Optional[str], analysis: bool) -> str:
+    """The one source of truth for a cell's artifact tag (and hence its
+    cache filename): ``policy=None`` resolves the workload's calibrated
+    operating point exactly like :func:`run_cell` does."""
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    variant = "analysis" if analysis else "deploy"
+    if policy is None:
+        policy = resolved_operating_point(SHAPES[shape_name]).policy.value
+    return f"{arch}_{shape_name}_{mesh_name}_{policy}_{variant}"
+
+
+def cell_path(arch: str, shape_name: str, multi_pod: bool,
+              policy: Optional[str], analysis: bool) -> str:
+    return os.path.join(
+        ART_DIR, f"{cell_tag(arch, shape_name, multi_pod, policy, analysis)}"
+        ".json")
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             policy: str = "copiftv2", rc: Optional[RunConfig] = None,
+             policy: Optional[str] = None, rc: Optional[RunConfig] = None,
              save: bool = True, analysis: bool = False) -> Dict[str, Any]:
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     variant = "analysis" if analysis else "deploy"
-    tag = f"{arch}_{shape_name}_{mesh_name}_{policy}_{variant}"
+    op = resolved_operating_point(SHAPES[shape_name])
+    if policy is None:
+        policy = op.policy.value
+    tag = cell_tag(arch, shape_name, multi_pod, policy, analysis)
     path = os.path.join(ART_DIR, f"{tag}.json")
     if save and os.path.exists(path):
         with open(path) as f:
@@ -270,6 +306,22 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "memory": mem_info,
         "collectives": coll,
         "roofline": rl.to_dict(),
+        # the machine-model operating point the cost model assumes: the
+        # calibrated (or default) cluster-level point for this workload —
+        # per-PE queue geometry plus how many PEs share the TCDM.  An
+        # explicit --policy / caller rc pin overrides the table's policy;
+        # the block reports the policy the cell actually ran under.
+        "machine_model": {
+            "workload": "train" if shape.mode == "train" else "serve",
+            "source": (op.source if rc.policy is op.policy else "override"),
+            "policy": rc.policy.value,
+            "queue_depth": op.queue_depth,
+            "queue_depth_i2f": op.queue_depth_i2f,
+            "queue_depth_f2i": op.queue_depth_f2i,
+            "unroll": op.unroll,
+            "n_cores": op.n_cores,
+            "tcdm_banks": op.tcdm_banks,
+        },
         "ok": True,
     }
     if save:
@@ -298,7 +350,9 @@ def main() -> None:
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
-    ap.add_argument("--policy", default="copiftv2")
+    ap.add_argument("--policy", default=None,
+                    help="pin the execution policy (default: resolve the "
+                         "workload's calibrated operating point)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--fresh", action="store_true", help="ignore cache")
     ap.add_argument("--analysis", action="store_true",
@@ -324,9 +378,7 @@ def main() -> None:
     for arch, shape_name, mp, analysis in cells:
         var = "analysis" if analysis else "deploy"
         tag = f"{arch}/{shape_name}/{'2x16x16' if mp else '16x16'}/{var}"
-        path = os.path.join(
-            ART_DIR, f"{arch}_{shape_name}_"
-            f"{'pod2x16x16' if mp else 'pod16x16'}_{args.policy}_{var}.json")
+        path = cell_path(arch, shape_name, mp, args.policy, analysis)
         if args.fresh and os.path.exists(path):
             os.remove(path)
         try:

@@ -20,7 +20,9 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="decode batch slots (default: 4 per cluster core "
+                         "of the calibrated 'serve' operating point)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -30,6 +32,9 @@ def main() -> None:
     rc = RunConfig(dtype="float32", param_dtype="float32", remat=False)
     params = init_model_params(jax.random.PRNGKey(args.seed), cfg)
     eng = ServeEngine(params, cfg, rc, batch_slots=args.slots, max_len=256)
+    op = eng.operating_point
+    print(f"policy={op.policy.value} (source={op.source}, "
+          f"cores={op.n_cores}, slots={len(eng.slots)})")
 
     rng = jax.random.PRNGKey(args.seed + 1)
     rids = []

@@ -70,7 +70,8 @@ def main() -> None:
                                    operating_point=op)
     top = trainer.operating_point
     print(f"policy={top.policy.value} (source={top.source}, "
-          f"depth={top.queue_depth}, unroll={top.unroll})")
+          f"depth={top.queue_depth}, unroll={top.unroll}, "
+          f"cores={top.n_cores}, banks={top.tcdm_banks or 'inf'})")
     t0 = time.time()
     out = trainer.run(params, num_steps=args.steps)
     dt = time.time() - t0

@@ -45,10 +45,21 @@ class ServeEngine:
     no artifact exists.  The resolved policy is threaded into the engine's
     :class:`RunConfig` so every kernel the decode path reaches sees it; the
     resolution itself never touches the per-step hot path.
+
+    Batch sizing is cluster-aware: with ``batch_slots=None`` the engine
+    sizes its decode batch as ``SLOTS_PER_CORE * n_cores`` from the
+    resolved operating point — an N-PE cluster sustains N concurrent
+    per-core token streams, so the continuous batch scales with the
+    calibrated cluster width instead of implicitly assuming one PE.  An
+    explicit ``batch_slots`` always wins.
     """
 
+    #: decode slots the batch allocates per cluster core (one PE's worth of
+    #: concurrent streams at the paper's operating point)
+    SLOTS_PER_CORE = 4
+
     def __init__(self, params: Pytree, cfg: ModelConfig, rc: RunConfig,
-                 batch_slots: int = 4, max_len: int = 256,
+                 batch_slots: Optional[int] = None, max_len: int = 256,
                  greedy: bool = True,
                  operating_point: Optional[OperatingPoint] = None,
                  policy_table: Optional[PolicyTable] = None):
@@ -56,6 +67,9 @@ class ServeEngine:
         self.params = params
         rc, self.operating_point = resolve_run_config(
             rc, "serve", operating_point, policy_table)
+        if batch_slots is None:
+            batch_slots = self.SLOTS_PER_CORE * max(
+                1, self.operating_point.n_cores)
         self.cfg, self.rc = cfg, rc
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pending: List[Request] = []

@@ -271,10 +271,39 @@ def test_queue_matmul_explicit_depth_survives_calibrated_policy(
     import jax.numpy as jnp
     x = jnp.ones((4, 4)); w = jnp.ones((4, 4))
     ops.queue_matmul(x, w, depth=3)
-    assert calls[-1]["depth"] == 3
+    assert calls[-1]["depth_x"] == calls[-1]["depth_w"] == 3
     assert calls[-1]["policy"] is P.COPIFTV2     # the depth-honouring path
+    # a single-ring override keeps the other ring on the symmetric depth
+    ops.queue_matmul(x, w, depth=3, depth_w=1)
+    assert (calls[-1]["depth_x"], calls[-1]["depth_w"]) == (3, 1)
+    assert calls[-1]["policy"] is P.COPIFTV2
     ops.queue_matmul(x, w)                       # no explicit depth: table wins
     assert calls[-1]["policy"] is P.BASELINE
+
+
+def test_queue_matmul_asymmetric_ring_depths_from_calibration(
+        tmp_calibration, monkeypatch):
+    """Satellite contract: the x ring takes the calibrated I2F depth, the w
+    ring the F2I depth, each falling back to the symmetric queue_depth."""
+    from repro.kernels.queue_matmul import ops
+
+    calls = []
+    monkeypatch.setattr(
+        ops, "_queue_matmul",
+        lambda x, w, **kw: calls.append(kw) or x @ w)
+    monkeypatch.setattr(
+        ops, "operating_point",
+        lambda: OperatingPoint(policy=P.COPIFTV2, queue_depth=4,
+                               queue_depth_i2f=2, queue_depth_f2i=8,
+                               unroll=4, source="calibrated"))
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4)); w = jnp.ones((4, 4))
+    ops.queue_matmul(x, w)
+    assert (calls[-1]["depth_x"], calls[-1]["depth_w"]) == (2, 8)
+    assert calls[-1]["unroll"] == 4
+    # explicit per-ring override beats the calibrated asymmetric geometry
+    ops.queue_matmul(x, w, depth_x=16)
+    assert (calls[-1]["depth_x"], calls[-1]["depth_w"]) == (16, 8)
 
 
 def test_serve_engine_resolves_policy_at_startup(tmp_calibration):

@@ -1,0 +1,330 @@
+"""Cluster machine-model tests — the PR-5 contracts.
+
+The load-bearing one: :class:`repro.core.cluster.ClusterStepper` with
+``n_cores=1, tcdm_banks=None`` is **bit-identical** to the single-core
+:class:`~repro.core.machine.Stepper` — cycles, energy, stall breakdown,
+FIFO push/pop sequences, occupancy highwater and the functional environment
+— across the *default sweep grid* (every kernel x policy x depth x latency
+x unroll).  Plus: contention-free N-core clusters equal N independent
+single-core runs; work partitioning preserves reference semantics; the bank
+arbiter behaves (monotone degradation, bank stalls, event/cycle parity);
+and the cluster columns round-trip through CSV with legacy CSVs still
+readable.
+"""
+import dataclasses
+import io
+
+import pytest
+
+from repro.core import (KERNELS, ClusterConfig, ClusterStepper,
+                        MachineConfig, OperatingPoint, Stepper, SweepPoint,
+                        TransformConfig, grid, lower, partition_kernel,
+                        read_csv, run_point, run_sweep, simulate_cluster,
+                        write_csv)
+from repro.core.isa import E_TCDM_INTERCONNECT, MEM_KINDS
+from repro.core.policy import ExecutionPolicy as P
+from repro.core.sweep import LEGACY_CSV_FIELDS, record_to_row
+
+#: every SimResult facet the single-core engine and the degenerate cluster
+#: must agree on bit-for-bit
+FACETS = ("cycles", "energy", "instrs", "stalls", "push_seq", "pop_seq",
+          "max_queue_occupancy", "fifo_violations", "env")
+
+#: the default exploration grid (the 288-config space explore.py sweeps)
+DEFAULT_GRID = dict(queue_depths=(1, 2, 4, 8), queue_latencies=(1, 2),
+                    unrolls=(4, 8), n_samples=32)
+
+
+def _lowered(pt: SweepPoint):
+    tcfg = TransformConfig(n_samples=pt.n_samples, queue_depth=pt.queue_depth,
+                           unroll=pt.unroll, batch=min(32, pt.n_samples))
+    try:
+        return lower(KERNELS[pt.kernel], P.parse(pt.policy), tcfg)
+    except ValueError:
+        return None                   # infeasible schedule: nothing to diff
+
+
+# ---------------------------------------------------------------------------
+# The bit-identity contract, differentially across the default sweep grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_single_core_cluster_bit_identical_across_default_grid(kernel):
+    """CI gate for the PR-5 acceptance criterion: the degenerate cluster
+    (one core, conflict-free TCDM) matches the plain Stepper exactly on
+    every point of the default sweep grid."""
+    for pt in grid(kernels=[kernel], **DEFAULT_GRID):
+        prog = _lowered(pt)
+        if prog is None:
+            continue
+        mcfg = MachineConfig(queue_depth=pt.queue_depth,
+                             queue_latency=pt.queue_latency)
+        ref = Stepper(prog, mcfg).run()
+        cres = ClusterStepper([prog], ClusterConfig(machine=mcfg)).run()
+        core = cres.core_results[0]
+        for facet in FACETS:
+            assert getattr(ref, facet) == getattr(core, facet), (pt, facet)
+        assert (cres.cycles, cres.energy) == (ref.cycles, ref.energy), pt
+        assert cres.stalls == ref.stalls and cres.ipc == ref.ipc, pt
+
+
+@pytest.mark.tier1
+def test_single_core_record_identical_through_run_point():
+    """A cluster-path record (tcdm_banks set, one core, no memory pressure)
+    equals the plain single-core record field-for-field."""
+    plain = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                                 n_samples=32))
+    # expf has no TCDM accesses, so any bank count is contention-free
+    clus = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                                n_samples=32, tcdm_banks=7))
+    assert dataclasses.replace(clus, tcdm_banks=None) == plain
+
+
+# ---------------------------------------------------------------------------
+# Contention-free N-core == N independent single-core runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_contention_free_ncore_equals_independent_runs(kernel):
+    tcfg = TransformConfig(n_samples=32, queue_depth=4)
+    progs = partition_kernel(KERNELS[kernel], P.COPIFTV2, tcfg, n_cores=4)
+    cres = simulate_cluster(progs, ClusterConfig(n_cores=4))
+    assert cres.n_cores == 4 and cres.n_samples == 32
+    solo_energy = 0.0
+    mem_accesses = 0
+    for prog, core in zip(progs, cres.core_results):
+        solo = Stepper(prog, MachineConfig()).run()
+        # per-core cycles (and all timing behavior) match an independent run
+        for facet in ("cycles", "instrs", "stalls", "push_seq", "pop_seq",
+                      "max_queue_occupancy", "env"):
+            assert getattr(solo, facet) == getattr(core, facet), facet
+        # energy differs only by the per-access interconnect charge
+        n_mem = sum(1 for lst in prog.streams.values()
+                    for ins in lst if ins.kind in MEM_KINDS)
+        mem_accesses += n_mem
+        solo_energy += solo.energy
+        assert core.energy == pytest.approx(
+            solo.energy + E_TCDM_INTERCONNECT * n_mem, rel=1e-12)
+    assert cres.cycles == max(r.cycles for r in cres.core_results)
+    assert cres.energy == pytest.approx(
+        solo_energy + E_TCDM_INTERCONNECT * mem_accesses, rel=1e-12)
+    assert cres.bank_stalls == 0
+
+
+@pytest.mark.tier1
+def test_partitioned_outputs_match_sequential_reference():
+    """Disjoint sample ranges with fast-forwarded loop-carried state: the
+    concatenated per-core outputs equal the sequential interpreter even for
+    serial-dependence kernels (LCG chains, running accumulators)."""
+    for kernel in ("poly_lcg", "dequant_dot", "histf"):
+        rec = run_point(SweepPoint(kernel=kernel, policy="copiftv2",
+                                   n_samples=32, n_cores=4))
+        assert rec.ok and rec.equivalent and not rec.fifo_violations, rec
+
+
+@pytest.mark.tier1
+def test_partition_rejects_indivisible_and_deep_lags():
+    from repro.core import LoopDFG, Node, OpKind, s
+    tcfg = TransformConfig(n_samples=32)
+    with pytest.raises(ValueError, match="divisible"):
+        partition_kernel(KERNELS["expf"], P.COPIFTV2, tcfg, n_cores=5)
+    rec = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                               n_samples=30, n_cores=4))
+    assert rec.status == "rejected"
+    lag2 = LoopDFG("lag2", [Node("a", OpKind.IALU, (s("a", 2),),
+                                 fn=lambda x: x + 1, out=True)],
+                   init={"a": 0})
+    with pytest.raises(ValueError, match="lag 1"):
+        partition_kernel(lag2, P.BASELINE, tcfg, n_cores=2)
+
+
+@pytest.mark.tier1
+def test_partition_single_core_is_plain_lowering():
+    tcfg = TransformConfig(n_samples=16)
+    progs = partition_kernel(KERNELS["expf"], P.COPIFTV2, tcfg, n_cores=1)
+    assert len(progs) == 1
+    assert progs[0].name == "expf"     # no @core tag: the program itself
+
+
+# ---------------------------------------------------------------------------
+# Bank contention semantics
+# ---------------------------------------------------------------------------
+
+def _cluster(kernel, n_cores, banks, penalty=1, engine="event", n=32):
+    tcfg = TransformConfig(n_samples=n, queue_depth=4)
+    progs = partition_kernel(KERNELS[kernel], P.COPIFTV2, tcfg, n_cores)
+    return simulate_cluster(
+        progs, ClusterConfig(n_cores=n_cores, tcdm_banks=banks,
+                             bank_conflict_penalty=penalty), engine=engine)
+
+
+@pytest.mark.tier1
+def test_bank_contention_slows_and_attributes():
+    free = _cluster("histf", 4, None)
+    tight = _cluster("histf", 4, 2, penalty=4)
+    assert tight.cycles > free.cycles          # contention costs cycles
+    assert tight.bank_stalls > 0
+    assert any(k.endswith("_bank") for k in tight.stalls)
+    assert free.bank_stalls == 0
+    # scarcer banks can only be slower than the conflict-free TCDM
+    mid = _cluster("histf", 4, 8, penalty=4)
+    assert free.cycles <= mid.cycles <= tight.cycles
+
+
+@pytest.mark.tier1
+def test_contended_cluster_event_cycle_engine_parity():
+    """Issue timing, energy, FIFO sequences, env and per-unit stall totals
+    agree between the event-driven and naive per-cycle cluster engines on a
+    contended configuration (the cause split inside a bank-blocked stretch
+    is allowed to differ; the totals are not)."""
+    ev = _cluster("histf", 4, 2, penalty=4)
+    cy = _cluster("histf", 4, 2, penalty=4, engine="cycle")
+    assert (ev.cycles, ev.energy, ev.instrs) == (cy.cycles, cy.energy,
+                                                 cy.instrs)
+    for a, b in zip(ev.core_results, cy.core_results):
+        assert a.env == b.env
+        assert a.push_seq == b.push_seq and a.pop_seq == b.pop_seq
+        assert a.cycles == b.cycles
+        for unit in ("int", "fp"):
+            ta = sum(v for k, v in a.stalls.items() if k.startswith(unit))
+            tb = sum(v for k, v in b.stalls.items() if k.startswith(unit))
+            assert ta == tb, unit
+
+
+@pytest.mark.tier1
+def test_contention_free_cluster_engines_bit_identical():
+    ev = _cluster("dequant_dot", 2, None)
+    cy = _cluster("dequant_dot", 2, None, engine="cycle")
+    for a, b in zip(ev.core_results, cy.core_results):
+        for facet in FACETS:
+            assert getattr(a, facet) == getattr(b, facet), facet
+
+
+@pytest.mark.tier1
+def test_malformed_cluster_geometry_rejected_not_raised():
+    """run_point never raises for model-level outcomes: a bad cluster
+    geometry yields one rejected record (and never masquerades as a cheap
+    single-PE point), and grid() refuses to enumerate one."""
+    for kw in (dict(n_cores=0), dict(tcdm_banks=0), dict(n_cores=-1)):
+        rec = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                                   n_samples=16, **kw))
+        assert rec.status == "rejected" and "cluster geometry" in rec.detail
+    with pytest.raises(ValueError, match="n_cores"):
+        grid(kernels=["expf"], n_cores=(0,))
+    with pytest.raises(ValueError, match="tcdm_banks"):
+        grid(kernels=["expf"], tcdm_banks=(0,))
+
+
+@pytest.mark.tier1
+def test_cluster_config_validation():
+    with pytest.raises(ValueError):
+        ClusterConfig(n_cores=0)
+    with pytest.raises(ValueError):
+        ClusterConfig(tcdm_banks=0)
+    with pytest.raises(ValueError):
+        ClusterConfig(bank_conflict_penalty=0)
+    prog = lower(KERNELS["expf"], P.COPIFTV2, TransformConfig(n_samples=8))
+    with pytest.raises(ValueError, match="n_cores=2"):
+        ClusterStepper([prog], ClusterConfig(n_cores=2))
+    with pytest.raises(ValueError, match="engine"):
+        ClusterStepper([prog], ClusterConfig(), engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# Sweep / CSV / policy integration
+# ---------------------------------------------------------------------------
+
+def test_cluster_sweep_grid_and_equivalence():
+    pts = grid(kernels=["expf", "histf"], queue_depths=(2, 4), n_samples=32,
+               n_cores=(1, 2, 4), tcdm_banks=(None, 4))
+    assert len(pts) == 2 * 3 * 2 * 3 * 2
+    recs = run_sweep(pts, workers=1)
+    assert all(r.ok and r.equivalent and not r.fifo_violations for r in recs)
+    # aggregate IPC scales past the dual-issue bound; per-core IPC does not
+    multi = [r for r in recs if r.n_cores == 4 and r.policy == "copiftv2"]
+    assert multi and all(r.ipc > 2.0 for r in multi)
+    assert all(r.ipc_per_core <= 2.0 + 1e-9 for r in recs)
+
+
+@pytest.mark.tier1
+def test_cluster_csv_round_trip_and_legacy_read(tmp_path):
+    """Satellite contract: the new cluster columns round-trip losslessly
+    AND PR-2-era CSVs without them still read (n_cores defaults to 1)."""
+    import csv as _csv
+    recs = run_sweep(grid(kernels=["histf"], queue_depths=(2,), n_samples=16,
+                          n_cores=(1, 2), tcdm_banks=(None, 2)), workers=1)
+    path = str(tmp_path / "cluster.csv")
+    assert write_csv(recs, path) == len(recs)
+    assert read_csv(path) == recs
+    # legacy emission: the same single-core records minus the cluster columns
+    legacy = [r for r in recs if r.n_cores == 1 and r.tcdm_banks is None]
+    buf = io.StringIO()
+    w = _csv.DictWriter(buf, fieldnames=list(LEGACY_CSV_FIELDS))
+    w.writeheader()
+    for r in legacy:
+        row = record_to_row(r)
+        w.writerow({k: row[k] for k in LEGACY_CSV_FIELDS})
+    buf.seek(0)
+    back = read_csv(buf)
+    assert back == legacy
+    assert all(r.n_cores == 1 and r.tcdm_banks is None and
+               r.ipc_per_core == r.ipc for r in back)
+
+
+@pytest.mark.tier1
+def test_serve_engine_batch_slots_scale_with_cluster_point():
+    from repro.config import ModelConfig, RunConfig
+    from repro.serve import ServeEngine
+
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=1, d_ff=32, vocab=64)
+    rc = RunConfig(dtype="float32", param_dtype="float32", remat=False)
+    op = OperatingPoint(policy=P.COPIFTV2, n_cores=4)
+    eng = ServeEngine({}, cfg, rc, max_len=8, operating_point=op)
+    assert len(eng.slots) == ServeEngine.SLOTS_PER_CORE * 4
+    # explicit batch_slots always wins
+    eng = ServeEngine({}, cfg, rc, batch_slots=2, max_len=8,
+                      operating_point=op)
+    assert len(eng.slots) == 2
+
+
+@pytest.mark.tier1
+def test_operating_point_carries_cluster_fields_through_calibration():
+    from repro.core.calibrate import POINT_FIELDS, point_to_dict
+
+    rec = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                               n_samples=16, n_cores=2))
+    d = point_to_dict(rec)
+    assert set(POINT_FIELDS) == set(d)
+    assert d["n_cores"] == 2 and d["tcdm_banks"] is None
+
+
+# ---------------------------------------------------------------------------
+# Front-diff gate unit checks (the drift detector itself)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_front_diff_detects_drift_and_moves():
+    import copy
+    import sys
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.front_diff import diff_fronts
+
+    base = {"expf": [
+        {"kernel": "expf", "policy": "copiftv2", "queue_depth": 4,
+         "queue_latency": 1, "unroll": 8, "n_cores": 1, "tcdm_banks": None,
+         "cycles": 100, "ipc": 1.5, "energy": 2000.0}]}
+    assert diff_fronts(base, copy.deepcopy(base)) == []
+    moved = copy.deepcopy(base)
+    moved["expf"][0]["cycles"] = 101
+    assert any("cycles moved" in p for p in diff_fronts(base, moved))
+    drifted = copy.deepcopy(base)
+    drifted["expf"][0]["energy"] *= 1.001
+    assert any("energy drifted" in p for p in diff_fronts(base, drifted))
+    gone = {"expf": []}
+    assert any("vanished" in p for p in diff_fronts(base, gone))
+    extra = copy.deepcopy(base)
+    extra["expf"].append(dict(base["expf"][0], queue_depth=8))
+    assert any("appeared" in p for p in diff_fronts(base, extra))

@@ -359,7 +359,9 @@ def test_benchmarks_run_smoke():
     assert "claims_peak_ipc_v2" in res.stdout
     assert "sweep_perf_speedup_event_cached" in res.stdout
     assert "calibration_expf_ipc_gain" in res.stdout
+    assert "cluster_headline_speedup_4c" in res.stdout
+    assert "front_diff_drift_findings" in res.stdout
     # per-section pass/fail summary: every section reports, none failed
     assert "# --- summary ---" in res.stdout
     assert "# FAIL" not in res.stdout
-    assert res.stdout.count("# PASS:") == 4
+    assert res.stdout.count("# PASS:") == 6
