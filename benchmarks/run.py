@@ -42,8 +42,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import (calibration, cluster_scaling, dse, fig3, front_diff,
-                       sweep_perf)
+        from . import (calibration, cluster_pipeline, cluster_scaling, dse,
+                       fig3, front_diff, sweep_perf)
         _run_sections([
             ("fig3 smoke (machine model, small n)", fig3.smoke),
             ("dse smoke (tiny sweep grid + equivalence fuzz)", dse.smoke),
@@ -53,14 +53,16 @@ def main(argv=None) -> None:
              calibration.smoke),
             ("cluster scaling smoke (weak/strong 1-4 cores + bank "
              "contention)", cluster_scaling.smoke),
+            ("cluster pipeline smoke (producer/consumer pairs vs work "
+             "partition on a bank-starved TCDM)", cluster_pipeline.smoke),
             ("front diff (committed Pareto-front drift gate)",
              front_diff.smoke),
         ])
         return
 
-    from . import (calibration, cluster_scaling, collective_policy, dse,
-                   fig3, front_diff, kernel_bench, roofline_table,
-                   sweep_perf)
+    from . import (calibration, cluster_pipeline, cluster_scaling,
+                   collective_policy, dse, fig3, front_diff, kernel_bench,
+                   roofline_table, sweep_perf)
     _run_sections([
         ("fig3 (paper Fig.3a/b/c via the machine model)", fig3.main),
         ("dse (design-space sweep + Pareto fronts)", dse.main),
@@ -70,6 +72,8 @@ def main(argv=None) -> None:
          calibration.main),
         ("cluster scaling (weak/strong 1-8 cores + bank contention)",
          cluster_scaling.main),
+        ("cluster pipeline (producer/consumer pairs vs work partition)",
+         cluster_pipeline.main),
         ("front diff (committed Pareto-front drift gate)", front_diff.main),
         ("kernels (interpret-mode micro-bench)", kernel_bench.main),
         ("collective policy (bulk vs ring)", collective_policy.main),

@@ -6,7 +6,7 @@ full sweep and the fronts as CSV, and re-checks on *every* swept point that
 the lowered program computes bit-identical outputs to the sequential baseline
 interpreter — the sweep doubles as the repo's largest semantics fuzzer.
 
-Usage (defaults sweep 288 configurations: 6 kernels x 3 policies x
+Usage (defaults sweep 336 configurations: 7 kernels x 3 policies x
 4 depths x 2 latencies x 2 unrolls):
 
     PYTHONPATH=src python examples/explore.py
@@ -27,6 +27,19 @@ is bit-identical to the single-PE machine — the contract
     PYTHONPATH=src python examples/explore.py \
         --kernels poly_lcg,histf --policies copiftv2 \
         --cores 1,2,4 --banks inf,8,2
+
+Pipelined-cluster axes (``transform.partition_pipeline``): ``--pipeline``
+adds producer/consumer points where each core *pair* splits one kernel —
+the INT core streams operands through bounded inter-core channels to the
+FP-heavy core, with DMA double-buffering hiding the loads.  ``--cq-depths``
+sweeps the channel FIFO depth and ``--dma-buffers`` the double-buffering
+degree.  Pipelined points need an even core count and the COPIFTv2 policy
+(others are rejected, not errors); stall columns ``cq_stalls`` /
+``dma_stalls`` report channel back-pressure and DMA waits:
+
+    PYTHONPATH=src python examples/explore.py \
+        --kernels cluster_matmul --policies copiftv2 --pipeline both \
+        --cores 2,4 --banks 2,8 --cq-depths 2,4,8 --dma-buffers 1,2,4
 
 ``--engine`` picks the simulation core: ``event`` (default) is the
 event-driven time-skip engine — bit-identical to ``cycle`` (the naive
@@ -99,7 +112,7 @@ def calibrate_main(argv) -> int:
                     "calibration artifacts consumed by queue_matmul / serve "
                     "/ train (see the module docstring).")
     ap.add_argument("--kernels", default=None,
-                    help="comma list (default: all six)")
+                    help="comma list (default: all seven)")
     ap.add_argument("--policies", default=None,
                     help="comma list of baseline,copift,copiftv2")
     ap.add_argument("--depths", type=_ints, default=(1, 2, 4, 8))
@@ -159,7 +172,7 @@ def main(argv=None) -> int:
         "  (Run 'explore.py calibrate --help' for the calibration "
         "subcommand.)")
     ap.add_argument("--kernels", default=None,
-                    help="comma list (default: all six)")
+                    help="comma list (default: all seven)")
     ap.add_argument("--policies", default=None,
                     help="comma list of baseline,copift,copiftv2 (default: all)")
     ap.add_argument("--depths", type=_ints, default=(1, 2, 4, 8),
@@ -182,6 +195,20 @@ def main(argv=None) -> int:
     ap.add_argument("--banks", type=_opt_ints, default=(None,),
                     help="TCDM bank counts to sweep (comma list; 'inf' = "
                          "conflict-free/infinite banks)")
+    ap.add_argument("--pipeline", choices=("off", "on", "both"),
+                    default="off",
+                    help="pipelined producer/consumer core pairs "
+                         "(transform.partition_pipeline): 'on' sweeps only "
+                         "pipelined points, 'both' adds them next to the "
+                         "work-partitioned ones; needs an even --cores "
+                         "value and the copiftv2 policy (other combinations "
+                         "are rejected, not errors)")
+    ap.add_argument("--cq-depths", type=_ints, default=(4,),
+                    help="inter-core channel FIFO depths to sweep "
+                         "(pipelined points; runtime property like --banks)")
+    ap.add_argument("--dma-buffers", type=_ints, default=(2,),
+                    help="producer DMA double-buffering degrees to sweep "
+                         "(pipelined points; shapes the lowered schedule)")
     ap.add_argument("--n-samples", type=int, default=32)
     ap.add_argument("--workers", type=int, default=None,
                     help="process-pool width (0/1 = serial)")
@@ -194,11 +221,15 @@ def main(argv=None) -> int:
     kernels = args.kernels.split(",") if args.kernels else None
     policies = ([ExecutionPolicy.parse(p) for p in args.policies.split(",")]
                 if args.policies else None)
+    pipelines = {"off": (False,), "on": (True,),
+                 "both": (False, True)}[args.pipeline]
     pts = grid(kernels=kernels, policies=policies, queue_depths=args.depths,
                queue_latencies=args.latencies, unrolls=args.unrolls,
                n_samples=args.n_samples, engine=args.engine,
                i2f_depths=args.depths_i2f, f2i_depths=args.depths_f2i,
-               n_cores=args.cores, tcdm_banks=args.banks)
+               n_cores=args.cores, tcdm_banks=args.banks,
+               pipelines=pipelines, cq_depths=args.cq_depths,
+               dma_buffers=args.dma_buffers)
     if not pts:
         ap.error("empty sweep grid: every axis needs at least one value")
     workers = resolve_workers(len(pts), args.workers)

@@ -21,10 +21,12 @@ from .pareto import (dominates, format_front, pareto_by_kernel, pareto_front,
                      read_csv, write_csv)
 from .policy import (WORKLOAD_PROXIES, ExecutionPolicy, OperatingPoint,
                      PolicyTable, clear_policy_table_cache, default_table)
-from .sweep import (CSV_FIELDS, LEGACY_CSV_FIELDS, SweepPoint, SweepRecord,
-                    clear_worker_caches, grid, partition_points,
-                    resolve_workers, run_point, run_sweep, sweep_summary)
-from .transform import TransformConfig, analyze, lower, partition_kernel
+from .sweep import (CSV_FIELDS, LEGACY_CSV_FIELDS, PRE_PIPELINE_CSV_FIELDS,
+                    SweepPoint, SweepRecord, clear_worker_caches, grid,
+                    partition_points, resolve_workers, run_point, run_sweep,
+                    sweep_summary)
+from .transform import (TransformConfig, analyze, lower, partition_kernel,
+                        partition_pipeline)
 
 __all__ = [
     "KERNELS", "LoopDFG", "Node", "s", "Instr", "OpKind", "Queue", "Unit",
@@ -41,7 +43,9 @@ __all__ = [
     "WORKLOAD_PROXIES", "ExecutionPolicy", "OperatingPoint", "PolicyTable",
     "clear_policy_table_cache", "default_table",
     "TransformConfig", "analyze", "lower", "partition_kernel",
-    "CSV_FIELDS", "LEGACY_CSV_FIELDS", "SweepPoint", "SweepRecord",
+    "partition_pipeline",
+    "CSV_FIELDS", "LEGACY_CSV_FIELDS", "PRE_PIPELINE_CSV_FIELDS",
+    "SweepPoint", "SweepRecord",
     "clear_worker_caches", "grid", "partition_points", "resolve_workers",
     "run_point", "run_sweep", "sweep_summary",
 ]

@@ -180,6 +180,48 @@ def make_box_muller() -> LoopDFG:
 
 
 # ---------------------------------------------------------------------------
+def make_cluster_matmul() -> LoopDFG:
+    """int8-quantized matmul micro-tile: two packed operand loads, integer
+    unpack, FP dequantize (zero-point + scale folded into the FP thread) and
+    a two-lane accumulator.  Strictly one-directional (int -> fp, four I2F
+    crossings per sample) with an integer half (~11 instrs) balancing the FP
+    half (12 instrs) — the cluster *pipeline* target: a producer core
+    streams unpacked operands through an inter-core channel to a consumer
+    core running the FP stream (``transform.partition_pipeline``)."""
+    def packed_a(i: int) -> int:
+        return (((i * 37) % 256) << 16) | ((i * 59) % 256)
+
+    def packed_b(i: int) -> int:
+        return (((i * 41) % 256) << 16) | ((i * 67) % 256)
+
+    nodes = [
+        Node("addr", OpKind.IALU, (s("addr", 1),), fn=lambda a: a + 4),
+        Node("pa", OpKind.LW, (s("addr"),), fn=lambda a: packed_a(a // 4)),
+        Node("pb", OpKind.LW, (s("addr"),), fn=lambda a: packed_b(a // 4)),
+        Node("a0", OpKind.IALU, (s("pa"),), fn=lambda p: (p >> 16) & 0xFFFF),
+        Node("a1", OpKind.IALU, (s("pa"),), fn=lambda p: p & 0xFFFF),
+        Node("b0", OpKind.IALU, (s("pb"),), fn=lambda p: (p >> 16) & 0xFFFF),
+        Node("b1", OpKind.IALU, (s("pb"),), fn=lambda p: p & 0xFFFF),
+        Node("fa0", OpKind.CVT_I2F, (s("a0"),), fn=float),
+        Node("fa1", OpKind.CVT_I2F, (s("a1"),), fn=float),
+        Node("fb0", OpKind.CVT_I2F, (s("b0"),), fn=float),
+        Node("fb1", OpKind.CVT_I2F, (s("b1"),), fn=float),
+        Node("za0", OpKind.FADD, (s("fa0"),), fn=lambda x: x - 128.0),
+        Node("za1", OpKind.FADD, (s("fa1"),), fn=lambda x: x - 128.0),
+        Node("zb0", OpKind.FADD, (s("fb0"),), fn=lambda x: x - 128.0),
+        Node("zb1", OpKind.FADD, (s("fb1"),), fn=lambda x: x - 128.0),
+        Node("p0", OpKind.FMUL, (s("za0"), s("zb0")), fn=lambda x, y: x * y),
+        Node("p1", OpKind.FMUL, (s("za1"), s("zb1")), fn=lambda x, y: x * y),
+        Node("acc0", OpKind.FMA, (s("p0"), s("acc0", 1)),
+             fn=lambda x, a: a + x * 0.0078125, out=True),
+        Node("acc1", OpKind.FMA, (s("p1"), s("acc1", 1)),
+             fn=lambda x, a: a + x * 0.0078125, out=True),
+    ]
+    return LoopDFG("cluster_matmul", nodes,
+                   init={"addr": -4, "acc0": 0.0, "acc1": 0.0})
+
+
+# ---------------------------------------------------------------------------
 def make_histf() -> LoopDFG:
     """FP histogramming: FP thread scales/converts, integer thread updates
     bins — the F2I-dominant direction."""
@@ -201,6 +243,6 @@ def make_histf() -> LoopDFG:
 
 KERNELS: Dict[str, LoopDFG] = {}
 for _mk in (make_expf, make_logf, make_poly_lcg, make_dequant_dot,
-            make_box_muller, make_histf):
+            make_cluster_matmul, make_box_muller, make_histf):
     _k = _mk()
     KERNELS[_k.name] = _k

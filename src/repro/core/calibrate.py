@@ -45,7 +45,9 @@ from .sweep import SweepRecord, grid, run_sweep
 #: v2: cluster-aware points (n_cores / tcdm_banks / throughput /
 #: ipc_per_core) — PR-1-era single-PE artifacts are stale, consumers fall
 #: back to defaults until recalibrated.
-SCHEMA_VERSION = 2
+#: v3: pipelined-cluster points (pipeline / cq_depth / dma_buffers) — v2
+#: artifacts are stale in turn.
+SCHEMA_VERSION = 3
 
 OBJECTIVES = ("max-ipc", "min-energy", "energy-bounded-ipc")
 
@@ -53,6 +55,7 @@ OBJECTIVES = ("max-ipc", "min-energy", "energy-bounded-ipc")
 POINT_FIELDS = (
     "policy", "queue_depth", "queue_latency", "unroll", "unroll_int",
     "queue_depth_i2f", "queue_depth_f2i", "n_cores", "tcdm_banks",
+    "pipeline", "cq_depth", "dma_buffers",
     "ipc", "ipc_per_core", "energy", "cycles", "throughput", "efficiency",
 )
 
@@ -108,6 +111,8 @@ class CalibrationRecord:
             queue_depth_i2f=s["queue_depth_i2f"],
             queue_depth_f2i=s["queue_depth_f2i"],
             n_cores=s["n_cores"], tcdm_banks=s["tcdm_banks"],
+            pipeline=s["pipeline"], cq_depth=s["cq_depth"],
+            dma_buffers=s["dma_buffers"],
             source="calibrated")
 
     def to_dict(self) -> Dict[str, Any]:
@@ -176,11 +181,14 @@ def validate_artifact(d: Dict[str, Any]) -> None:
 
 def _cheap_hw_key(r: SweepRecord) -> Tuple:
     """Final tie-break: prefer the cheaper hardware/schedule realization —
-    fewer cores, shallower FIFOs, lower visibility latency, smaller
+    fewer cores, a plain work-partitioned cluster over a pipelined one (no
+    channel fabric / DMA engine to build), shallower FIFOs (intra-core and
+    inter-core), fewer DMA buffers, lower visibility latency, smaller
     unroll."""
     d_i2f = r.queue_depth_i2f or r.queue_depth
     d_f2i = r.queue_depth_f2i or r.queue_depth
-    return (r.n_cores, max(d_i2f, d_f2i), r.queue_latency, r.unroll,
+    return (r.n_cores, int(r.pipeline), max(d_i2f, d_f2i), r.cq_depth,
+            r.dma_buffers, r.queue_latency, r.unroll,
             r.unroll_int or r.unroll, r.policy)
 
 
@@ -295,7 +303,7 @@ def load_calibration(kernel: str,
 
 # -- the end-to-end calibration run ------------------------------------------
 
-#: the default calibration grid — the same 288-configuration space
+#: the default calibration grid — the same 336-configuration space
 #: ``examples/explore.py`` sweeps by default
 DEFAULT_GRID = dict(queue_depths=(1, 2, 4, 8), queue_latencies=(1, 2),
                     unrolls=(4, 8), n_samples=32)

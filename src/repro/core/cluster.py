@@ -39,6 +39,46 @@ another core can extend a bank window while a unit waits — so those
 configurations pay a few more host steps; the whole-machine jump, which
 re-checks on wake, is kept.)
 
+Inter-core channels and DMA (the pipelined-cluster fabric): programs may
+carry ``CQ_PUSH`` / ``CQ_POP`` ops (``Instr.cq`` names the channel) and
+``DMA_START`` / ``DMA_WAIT`` descriptors (``Instr.dma_words`` sizes the
+transfer).  Channels are bounded FIFOs living in the TCDM, shared by every
+core of the cluster:
+
+* **Determinism** — channel order is decided by the same min-(cycle, core)
+  scheduler as the bank arbiter: a push at cycle ``t`` is ordered after all
+  channel traffic at cycles ``< t`` and after lower-indexed cores' traffic
+  at ``t``, so push/pop sequences are bit-reproducible across runs and
+  engines.  A pushed entry becomes visible to the consumer ``cq_latency``
+  cycles after the push completes (one interconnect traversal), mirroring
+  the intra-core ``queue_latency``.
+* **Blocking + stall causes** — a ``CQ_PUSH`` into a channel holding
+  ``cq_depth`` entries stalls its unit with the ``cq_full`` cause; a
+  ``CQ_POP`` of an empty (or not-yet-visible) channel stalls with
+  ``cq_empty``; a ``DMA_START`` past ``dma_buffers`` in-flight transfers
+  and a ``DMA_WAIT`` for an unfinished transfer stall with ``dma``.
+  Because channel state is mutable by *other* cores, a core blocked on a
+  channel op abandons time-skipping and re-checks every cycle (the clear
+  time is capped at ``cycle + 1``), which keeps the event engine's stall
+  attribution bit-identical to the per-cycle reference.  DMA state is
+  core-local and final at issue time, so DMA waits keep the full time-skip.
+* **Energy + bank occupancy** — each channel op charges the interconnect
+  access energy plus ``E_CQ_ACCESS`` (FIFO pointer maintenance) and
+  occupies the channel's TCDM bank (``channel % banks``) for one cycle — a
+  single-word pipelined access, *not* the full ``bank_conflict_penalty``
+  window.  A DMA transfer charges ``E_DMA_WORD`` per word at START; the
+  bulk transfer itself is modeled conflict-free (the engine schedules
+  around cores — the zero-stall premise of Colagrande et al.), and loads
+  marked ``Instr.local`` (reads from a DMA-staged buffer) bypass bank
+  arbitration and interconnect energy entirely.
+* **Deadlock** — each core keeps its own no-progress detector, so a cyclic
+  cross-core wait (A pops what only B pushes while B pops what only A
+  pushes) raises :class:`~.machine.DeadlockError` — annotated with the
+  cluster-wide channel occupancy — at the first core to exhaust its
+  ``deadlock_limit`` horizon instead of hanging.  A ``DMA_START`` blocked
+  on a full engine can never unblock (the freeing ``DMA_WAIT`` sits behind
+  it on the same in-order unit) and is likewise reported as a deadlock.
+
 The hard contract, enforced by ``tests/test_cluster.py`` differentially
 against :class:`~.machine.Stepper` across the default sweep grid:
 ``n_cores=1, tcdm_banks=None`` is **bit-identical** to the single-core
@@ -58,12 +98,15 @@ stall totals still agree, only the cause split within the window may shift.
 from __future__ import annotations
 
 import zlib
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .isa import BANK_STALL_KEYS, E_TCDM_INTERCONNECT, MEM_KINDS, Queue
-from .machine import (ENGINES, MachineConfig, Program, ReferenceStepper,
-                      SimResult, Stepper)
+from .isa import (BANK_STALL_KEYS, CQ_EMPTY_STALL_KEYS, CQ_FULL_STALL_KEYS,
+                  DMA_STALL_KEYS, E_CQ_ACCESS, E_DMA_WORD,
+                  E_TCDM_INTERCONNECT, MEM_KINDS, OpKind, Queue)
+from .machine import (ENGINES, DeadlockError, MachineConfig, Program,
+                      ReferenceStepper, SimResult, Stepper)
 from .policy import ExecutionPolicy
 
 
@@ -81,6 +124,18 @@ class ClusterConfig:
     #: energy per TCDM access through the shared interconnect; charged only
     #: when ``n_cores > 1`` (a single PE owns its scratchpad port)
     interconnect_energy: float = E_TCDM_INTERCONNECT
+    #: inter-core channel depth (entries per bounded FIFO through the TCDM)
+    cq_depth: int = 4
+    #: cycles from a channel push's completion to consumer-side visibility
+    #: (one interconnect traversal each way, mirroring ``queue_latency``)
+    cq_latency: int = 1
+    #: in-flight DMA transfers each per-core engine sustains (2 = the
+    #: classic double-buffering; a DMA_START past the cap stalls ``dma``)
+    dma_buffers: int = 2
+    #: DMA descriptor programming + engine start overhead, cycles
+    dma_setup: int = 8
+    #: DMA streaming bandwidth, cycles per word moved
+    dma_cycles_per_word: int = 1
     #: per-core machine configuration (queue geometry, latency, ...)
     machine: MachineConfig = field(default_factory=MachineConfig)
 
@@ -92,6 +147,16 @@ class ClusterConfig:
                 f"tcdm_banks must be positive or None, got {self.tcdm_banks}")
         if self.bank_conflict_penalty < 1:
             raise ValueError("bank_conflict_penalty must be >= 1")
+        if self.cq_depth < 1:
+            raise ValueError(f"cq_depth must be >= 1, got {self.cq_depth}")
+        if self.cq_latency < 0:
+            raise ValueError(
+                f"cq_latency must be >= 0, got {self.cq_latency}")
+        if self.dma_buffers < 1:
+            raise ValueError(
+                f"dma_buffers must be >= 1, got {self.dma_buffers}")
+        if self.dma_setup < 0 or self.dma_cycles_per_word < 1:
+            raise ValueError("invalid DMA timing parameters")
 
 
 class _Interconnect:
@@ -117,42 +182,194 @@ class _Interconnect:
     def free_at(self, bank: int) -> int:
         return self.busy_until.get(bank, 0)
 
-    def acquire(self, bank: int, now: int) -> None:
-        self.busy_until[bank] = now + self.penalty
+    def acquire(self, bank: int, now: int,
+                penalty: Optional[int] = None) -> None:
+        """Occupy ``bank`` from ``now``.  ``penalty`` overrides the bulk
+        service window — channel ops pass 1 (a single-word pipelined access
+        does not hold the bank for the full conflict window)."""
+        self.busy_until[bank] = now + (self.penalty if penalty is None
+                                       else penalty)
+
+
+class _ChannelFabric:
+    """Cluster-wide inter-core channel state: one bounded FIFO per channel
+    index, shared by every core stepper.  Entries are
+    ``(visible_at, value_name, value)`` — the same shape as the intra-core
+    COPIFT queues — and the cluster-level push/pop logs keep
+    ``(channel, value_name)`` tuples for FIFO-order verification."""
+    __slots__ = ("depth", "channels", "push_seq", "pop_seq", "violations")
+
+    def __init__(self, depth: int):
+        self.depth = depth
+        self.channels: Dict[int, deque] = {}
+        self.push_seq: List[Tuple[int, str]] = []
+        self.pop_seq: List[Tuple[int, str]] = []
+        #: (label, channel, expected value name, got value name)
+        self.violations: List[Tuple[str, int, str, str]] = []
+
+    def channel(self, c: int) -> deque:
+        ch = self.channels.get(c)
+        if ch is None:
+            ch = self.channels[c] = deque()
+        return ch
+
+    def push(self, c: int, visible_at: int, name: str, value) -> None:
+        self.channel(c).append((visible_at, name, value))
+        self.push_seq.append((c, name))
+
+    def pop(self, c: int) -> Tuple[int, str, object]:
+        entry = self.channels[c].popleft()
+        self.pop_seq.append((c, entry[1]))
+        return entry
+
+
+class _DmaEngine:
+    """Per-core DMA engine: a deque of in-flight transfer completion times.
+    A transfer's buffer stays occupied until its ``DMA_WAIT`` retires it —
+    that is what bounds the pipeline to ``dma_buffers`` stages."""
+    __slots__ = ("buffers", "inflight")
+
+    def __init__(self, buffers: int):
+        self.buffers = buffers
+        self.inflight: deque = deque()
+
+
+def _fabric_meta(ins, ccfg: "ClusterConfig") -> Optional[Tuple]:
+    """Pre-resolved fabric semantics for one instruction, or ``None`` for
+    ordinary ops.  Tag layout (first element):
+
+    * ``(0, chan, src_reg, pushed_name, visibility_delay)`` — CQ_PUSH
+    * ``(1, chan, dst_magic, expected_name|None, label)``   — CQ_POP
+    * ``(2, completion_delay, transfer_energy)``            — DMA_START
+    * ``(3,)``                                              — DMA_WAIT
+    """
+    if ins.kind is OpKind.CQ_PUSH or ins.kind is OpKind.CQ_POP:
+        if ins.cq is None:
+            raise ValueError(
+                f"{ins.label}: {ins.kind.value} needs a channel (Instr.cq)")
+        if ins.kind is OpKind.CQ_PUSH:
+            src = ins.srcs[0] if ins.srcs else None
+            return (0, ins.cq, src, ins.push_val or ins.label,
+                    ins.spec.latency + ccfg.cq_latency)
+        expect = ins.expects[0] if ins.expects else None
+        return (1, ins.cq, ins.srcs[0], expect, ins.label)
+    if ins.kind is OpKind.DMA_START:
+        return (2, ins.spec.latency + ccfg.dma_setup
+                + ins.dma_words * ccfg.dma_cycles_per_word,
+                E_DMA_WORD * ins.dma_words)
+    if ins.kind is OpKind.DMA_WAIT:
+        return (3,)
+    return None
+
+
+def _fabric_reason(core, m: Tuple, now: int) -> Optional[str]:
+    """The fabric stall cause blocking ``m`` at ``now``, or ``None``.
+    Shared verbatim by both engines (cause-string level; the event core
+    maps causes to pre-formatted keys)."""
+    tag = m[0]
+    if tag == 0:
+        if len(core._fabric.channel(m[1])) >= core._fabric.depth:
+            return "cq_full"
+    elif tag == 1:
+        ch = core._fabric.channel(m[1])
+        if not ch or ch[0][0] > now:
+            return "cq_empty"
+    elif tag == 2:
+        if len(core._dma.inflight) >= core._dma.buffers:
+            return "dma"
+    else:
+        infl = core._dma.inflight
+        if infl and infl[0] > now:
+            return "dma"
+    return None
+
+
+def _fabric_issue(core, m: Tuple, now: int) -> None:
+    """Apply ``m``'s fabric side effects at issue time.  Runs *before* the
+    base issue path so a CQ_POP's value lands in ``env`` for the base
+    machinery (fn / dst / intra-core pushes) to consume."""
+    tag = m[0]
+    if tag == 0:
+        core._fabric.push(m[1], now + m[4], m[3], core.env.get(m[2]))
+        core.energy += E_CQ_ACCESS
+    elif tag == 1:
+        _vis, name, val = core._fabric.pop(m[1])
+        core.env[m[2]] = val
+        if m[3] is not None and m[3] != name:
+            core._fabric.violations.append((m[4], m[1], m[3], name))
+        core.energy += E_CQ_ACCESS
+    elif tag == 2:
+        core._dma.inflight.append(now + m[1])
+        core.energy += m[2]
+    else:
+        if core._dma.inflight:
+            core._dma.inflight.popleft()
+
+
+#: event-engine stall-key maps per fabric cause string
+_FAB_KEYS = {"cq_full": CQ_FULL_STALL_KEYS,
+             "cq_empty": CQ_EMPTY_STALL_KEYS,
+             "dma": DMA_STALL_KEYS}
+
+_NEVER = float("inf")
 
 
 class _CoreStepper(Stepper):
     """One cluster core: the event-driven engine + the shared bank gate.
 
-    With no interconnect pressure (one core, infinite banks) every override
-    below is a no-op pass-through — the degenerate cluster core runs the
-    exact single-core code path, which is the bit-identity contract.
+    With no interconnect pressure (one core, infinite banks) and no fabric
+    ops every override below is a no-op pass-through — the degenerate
+    cluster core runs the exact single-core code path, which is the
+    bit-identity contract.
     """
 
-    def __init__(self, prog: Program, cfg: MachineConfig, ic: _Interconnect):
-        super().__init__(prog, cfg)
+    def __init__(self, prog: Program, ccfg: "ClusterConfig",
+                 ic: _Interconnect, fabric: _ChannelFabric):
+        super().__init__(prog, ccfg.machine)
         self._ic = ic
+        self._fabric = fabric
+        self._dma = _DmaEngine(ccfg.dma_buffers)
         #: id(exec_facts) -> bank, for TCDM-touching instructions only
         self._bank: Dict[int, int] = {}
         self._mem_ids: set = set()
+        #: id(exec_facts) -> fabric meta (see ``_fabric_meta``)
+        self._fab: Dict[int, Tuple] = {}
         for _u, lst in self.order:
             for ins in lst:
-                if ins.kind in MEM_KINDS:
+                m = _fabric_meta(ins, ccfg)
+                if m is not None:
+                    fid = id(ins.exec_facts)
+                    self._fab[fid] = m
+                    # channel ops touch the channel's TCDM bank for one
+                    # cycle; DMA descriptors and transfers stay bank-free
+                    if m[0] <= 1 and ic.banks is not None:
+                        self._bank[fid] = m[1] % ic.banks
+                elif ins.kind in MEM_KINDS and not ins.local:
                     self._mem_ids.add(id(ins.exec_facts))
                     if ic.banks is not None:
                         self._bank[id(ins.exec_facts)] = ic.bank_of(ins.label)
-        if self._bank:
-            # another core can extend a bank window while a unit waits, so
-            # the per-unit exact-wake skip is unsound here; replace (never
-            # mutate: the skip table is cached on the Program) each row's
-            # skip flags with all-False.  The whole-machine jump re-checks
-            # conditions on wake and stays sound.
+        if self._bank or self._fab:
+            # another core can extend a bank window or mutate a channel
+            # while a unit waits, so the per-unit exact-wake skip is unsound
+            # here; replace (never mutate: the skip table is cached on the
+            # Program) each row's skip flags with all-False.  The
+            # whole-machine jump re-checks conditions on wake and stays
+            # sound (channel clear-times are additionally capped below).
             for row in self._rows:
                 row[2] = [False] * len(row[2])
 
-    # -- bank gate: checked after every single-core issue condition ---------
+    # -- fabric + bank gates around the single-core issue conditions --------
+    # Check order, identical in both engines: busy -> fabric -> the
+    # single-core conditions -> bank.
 
     def _reason_key(self, f, now: int) -> Optional[str]:
+        m = self._fab.get(id(f))
+        if m is not None:
+            if self._busy[f[14]] > now:
+                return f[6]
+            cause = _fabric_reason(self, m, now)
+            if cause is not None:
+                return _FAB_KEYS[cause][f[0]]
         key = super()._reason_key(f, now)
         if key is None and self._bank:
             b = self._bank.get(id(f))
@@ -161,7 +378,33 @@ class _CoreStepper(Stepper):
         return key
 
     def _clear_times(self, f) -> Tuple[List[Tuple[str, float]], float]:
+        m = self._fab.get(id(f))
+        if m is not None and m[0] <= 1:
+            # channel state is mutable by other cores, so no clear-time a
+            # blocked core computes is trustworthy: cap the jump at one
+            # cycle (per-cycle re-check; empty bulk-attribution ranges keep
+            # the stall split bit-identical to the reference)
+            key = _FAB_KEYS["cq_full" if m[0] == 0 else "cq_empty"][f[0]]
+            t = self.cycle + 1
+            return [(key, t)], t
         ev, t_max = super()._clear_times(f)
+        if m is not None:
+            # DMA state is core-local and final at issue: exact clear-times.
+            # Insert after the busy entry so the bulk-attribution walk sees
+            # the same check order as _reason_key / _block_reason.
+            if m[0] == 2:
+                if len(self._dma.inflight) >= self._dma.buffers:
+                    # only a later same-unit DMA_WAIT could free a buffer —
+                    # impossible while this op blocks the unit: deadlock
+                    ev.insert(1, (DMA_STALL_KEYS[f[0]], _NEVER))
+                    t_max = _NEVER
+            else:
+                infl = self._dma.inflight
+                if infl:
+                    t = infl[0]
+                    ev.insert(1, (DMA_STALL_KEYS[f[0]], t))
+                    if t > t_max:
+                        t_max = t
         if self._bank:
             b = self._bank.get(id(f))
             if b is not None:
@@ -173,7 +416,15 @@ class _CoreStepper(Stepper):
 
     def _issue(self, f, now: int) -> int:
         fid = id(f)
-        if fid in self._mem_ids:
+        m = self._fab.get(fid)
+        if m is not None:
+            _fabric_issue(self, m, now)
+            if m[0] <= 1:
+                b = self._bank.get(fid)
+                if b is not None:
+                    self._ic.acquire(b, now, penalty=1)
+                self.energy += self._ic.e_access
+        elif fid in self._mem_ids:
             if self._bank:
                 self._ic.acquire(self._bank[fid], now)
             self.energy += self._ic.e_access
@@ -182,21 +433,38 @@ class _CoreStepper(Stepper):
 
 class _RefCoreStepper(ReferenceStepper):
     """Naive per-cycle cluster core — the differential oracle for
-    :class:`_CoreStepper` (``engine="cycle"``), with the same bank gate."""
+    :class:`_CoreStepper` (``engine="cycle"``), with the same fabric and
+    bank gates in the same check order."""
 
-    def __init__(self, prog: Program, cfg: MachineConfig, ic: _Interconnect):
-        super().__init__(prog, cfg)
+    def __init__(self, prog: Program, ccfg: "ClusterConfig",
+                 ic: _Interconnect, fabric: _ChannelFabric):
+        super().__init__(prog, ccfg.machine)
         self._ic = ic
+        self._fabric = fabric
+        self._dma = _DmaEngine(ccfg.dma_buffers)
         self._bank: Dict[int, int] = {}
         self._mem_ids: set = set()
+        self._fab: Dict[int, Tuple] = {}
         for _u, lst in self.order:
             for ins in lst:
-                if ins.kind in MEM_KINDS:
+                m = _fabric_meta(ins, ccfg)
+                if m is not None:
+                    self._fab[id(ins)] = m
+                    if m[0] <= 1 and ic.banks is not None:
+                        self._bank[id(ins)] = m[1] % ic.banks
+                elif ins.kind in MEM_KINDS and not ins.local:
                     self._mem_ids.add(id(ins))
                     if ic.banks is not None:
                         self._bank[id(ins)] = ic.bank_of(ins.label)
 
     def _block_reason(self, ins, now: int) -> Optional[str]:
+        m = self._fab.get(id(ins))
+        if m is not None:
+            if self.unit_busy[ins.unit] > now:
+                return "busy"
+            cause = _fabric_reason(self, m, now)
+            if cause is not None:
+                return cause
         reason = super()._block_reason(ins, now)
         if reason is None and self._bank:
             b = self._bank.get(id(ins))
@@ -206,7 +474,15 @@ class _RefCoreStepper(ReferenceStepper):
 
     def _do_issue(self, ins, now: int) -> int:
         iid = id(ins)
-        if iid in self._mem_ids:
+        m = self._fab.get(iid)
+        if m is not None:
+            _fabric_issue(self, m, now)
+            if m[0] <= 1:
+                b = self._bank.get(iid)
+                if b is not None:
+                    self._ic.acquire(b, now, penalty=1)
+                self.energy += self._ic.e_access
+        elif iid in self._mem_ids:
             if self._bank:
                 self._ic.acquire(self._bank[iid], now)
             self.energy += self._ic.e_access
@@ -227,6 +503,11 @@ class ClusterResult:
     n_samples: int
     energy: float
     core_results: List[SimResult]
+    #: inter-core channel traffic (cluster-wide, ordered by the scheduler)
+    cq_pushes: int = 0
+    cq_pops: int = 0
+    #: channel entries popped out of expected value order
+    cq_violations: int = 0
 
     @property
     def total_instrs(self) -> int:
@@ -278,6 +559,16 @@ class ClusterResult:
         return sum(v for k, v in self.stalls.items() if k.endswith("_bank"))
 
     @property
+    def cq_stalls(self) -> int:
+        """Cycles lost to inter-core channel back-pressure (full + empty)."""
+        return sum(v for k, v in self.stalls.items()
+                   if k.endswith("_cq_empty") or k.endswith("_cq_full"))
+
+    @property
+    def dma_stalls(self) -> int:
+        return sum(v for k, v in self.stalls.items() if k.endswith("_dma"))
+
+    @property
     def max_queue_occupancy(self) -> Dict[Queue, int]:
         out = {q: 0 for q in Queue}
         for r in self.core_results:
@@ -288,7 +579,8 @@ class ClusterResult:
 
     @property
     def fifo_violations(self) -> int:
-        return sum(len(r.fifo_violations) for r in self.core_results)
+        return (sum(len(r.fifo_violations) for r in self.core_results)
+                + self.cq_violations)
 
     def summary(self) -> Dict[str, object]:
         """Primitive-typed record mirroring ``SimResult.summary`` with the
@@ -312,6 +604,9 @@ class ClusterResult:
             "max_occ_f2i": self.max_queue_occupancy.get(Queue.F2I, 0),
             "fifo_violations": self.fifo_violations,
             "bank_stalls": self.bank_stalls,
+            "cq_stalls": self.cq_stalls,
+            "dma_stalls": self.dma_stalls,
+            "cq_pushes": self.cq_pushes,
             "stalls": dict(self.stalls),
         }
 
@@ -340,8 +635,9 @@ class ClusterStepper:
         self.interconnect = _Interconnect(
             banks=cfg.tcdm_banks, penalty=cfg.bank_conflict_penalty,
             e_access=cfg.interconnect_energy if cfg.n_cores > 1 else 0.0)
+        self.fabric = _ChannelFabric(cfg.cq_depth)
         core_cls = _CoreStepper if engine == "event" else _RefCoreStepper
-        self.cores = [core_cls(p, cfg.machine, self.interconnect)
+        self.cores = [core_cls(p, cfg, self.interconnect, self.fabric)
                       for p in progs]
 
     def run(self) -> ClusterResult:
@@ -352,15 +648,29 @@ class ClusterStepper:
             # every arbiter decision at cycle t already saw all accesses at
             # cycles < t and lower-indexed cores' accesses at t
             c = min(live, key=lambda i: (cores[i].cycle, i))
-            if not cores[c].step():
-                live.remove(c)
+            try:
+                if not cores[c].step():
+                    live.remove(c)
+            except DeadlockError as err:
+                raise self._cluster_deadlock(c, err) from err
         return self.result()
+
+    def _cluster_deadlock(self, c: int, err: DeadlockError) -> DeadlockError:
+        """Annotate a per-core deadlock with the cluster-wide picture: a
+        cyclic cross-core channel wait surfaces here (the first core to
+        exhaust its no-progress horizon raises), and the channel occupancy
+        plus every core's local cycle make the cycle legible."""
+        chans = {ch: len(q) for ch, q in sorted(self.fabric.channels.items())}
+        cycles = [core.cycle for core in self.cores]
+        return DeadlockError(
+            f"cross-core deadlock detected at core {c}: {err}; "
+            f"channel occupancy {chans}; per-core cycles {cycles}")
 
     def result(self) -> ClusterResult:
         results = [c.result() for c in self.cores]
         prog0 = self.cores[0].prog
         return ClusterResult(
-            name=prog0.name.split("@core")[0],
+            name=prog0.kernel_name,
             policy=prog0.policy,
             n_cores=self.cfg.n_cores,
             tcdm_banks=self.cfg.tcdm_banks,
@@ -368,6 +678,9 @@ class ClusterStepper:
             n_samples=sum(r.n_samples for r in results),
             energy=sum(r.energy for r in results),
             core_results=results,
+            cq_pushes=len(self.fabric.push_seq),
+            cq_pops=len(self.fabric.pop_seq),
+            cq_violations=len(self.fabric.violations),
         )
 
 

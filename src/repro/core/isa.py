@@ -53,6 +53,15 @@ class OpKind(enum.Enum):
     CVT_I2F = "cvt_i2f"    # fcvt.d.w / fmv.d.x : int operand -> FP result
     CVT_F2I = "cvt_f2i"    # fcvt.w.d / fmv.x.d : FP operand -> int result
     FMV_PUSH = "fmv_push"  # fmv.x.d used purely to push an FP value to F2I
+    # Cluster-level communication (``core.cluster``): inter-core queue ops
+    # and DMA transfer descriptors, all issued by the integer core.  Outside
+    # a cluster these degrade to plain register moves — the cluster core
+    # steppers attach the channel / engine semantics (see ``Instr.cq`` /
+    # ``Instr.dma_words``).
+    CQ_PUSH = "cq_push"    # push a register value into an inter-core channel
+    CQ_POP = "cq_pop"      # pop an inter-core channel head into a register
+    DMA_START = "dma_start"  # program a bulk TCDM transfer descriptor
+    DMA_WAIT = "dma_wait"    # retire the oldest in-flight DMA transfer
 
 
 #: Latency / energy table, loosely calibrated to Snitch (GF12, 1 GHz).
@@ -76,6 +85,10 @@ OP_TABLE: dict[OpKind, OpSpec] = {
     OpKind.CVT_I2F:  OpSpec(Unit.FP, 2, 1.6),
     OpKind.CVT_F2I:  OpSpec(Unit.FP, 2, 1.6),
     OpKind.FMV_PUSH: OpSpec(Unit.FP, 1, 0.9),
+    OpKind.CQ_PUSH:  OpSpec(Unit.INT, 1, 1.2),
+    OpKind.CQ_POP:   OpSpec(Unit.INT, 1, 1.2),
+    OpKind.DMA_START: OpSpec(Unit.INT, 1, 1.5),
+    OpKind.DMA_WAIT: OpSpec(Unit.INT, 1, 0.8),
 }
 
 #: Kinds executed on the FPSS whose *destination* is integer-homed.
@@ -86,6 +99,11 @@ FP_KINDS = frozenset(k for k, s in OP_TABLE.items() if s.unit is Unit.FP)
 #: a shared-memory cluster arbitrates over banks (``core.cluster``).
 MEM_KINDS = frozenset({OpKind.LW, OpKind.SW, OpKind.FLD, OpKind.FSD,
                        OpKind.FSD_SSR})
+#: Inter-core channel accesses: the bounded FIFOs live in TCDM, so pushes
+#: and pops also occupy a bank and cross the cluster interconnect.
+CQ_KINDS = frozenset({OpKind.CQ_PUSH, OpKind.CQ_POP})
+#: DMA descriptor management ops (per-core engine, ``core.cluster``).
+DMA_KINDS = frozenset({OpKind.DMA_START, OpKind.DMA_WAIT})
 
 # --- Energy model knobs (relative units) -----------------------------------
 #: extra energy for a queue push or pop (lightweight FIFO access)
@@ -107,6 +125,15 @@ E_STATIC_PER_CYCLE = 22.0
 #: multi-core clusters (``core.cluster``): a single PE owns its scratchpad
 #: port, so the ``n_cores=1`` machine stays bit-identical to ``machine``.
 E_TCDM_INTERCONNECT = 0.9
+#: extra energy for an inter-core channel push or pop on top of the TCDM
+#: access itself (head/tail pointer maintenance in the producer/consumer
+#: cores — the channels are plain TCDM ring buffers, ``core.cluster``)
+E_CQ_ACCESS = 0.5
+#: energy per word moved by the cluster DMA engine (SRAM read + interconnect
+#: traversal + SRAM write, no core fetch/decode on either side).  A
+#: DMA-staged word is then re-read locally without interconnect energy
+#: (``Instr.local``), trading one extra copy for conflict-free access.
+E_DMA_WORD = 2.0
 
 
 class Queue(enum.Enum):
@@ -116,16 +143,23 @@ class Queue(enum.Enum):
 
 #: pre-interned per-unit stall-counter keys (``"<unit>_<cause>"``), so the
 #: simulator hot path never string-formats; causes mirror
-#: ``machine.STALL_CAUSES`` plus the unit-busy check.  ``bank`` is the
-#: cluster-only cause (TCDM bank busy, ``core.cluster``).
+#: ``machine.STALL_CAUSES`` plus the unit-busy check.  ``bank`` /
+#: ``cq_empty`` / ``cq_full`` / ``dma`` are the cluster-only causes (TCDM
+#: bank busy, inter-core channel empty/full, DMA engine busy —
+#: ``core.cluster``).
 _STALL_KEYS = {
     u.value: {c: f"{u.value}_{c}"
-              for c in ("busy", "dep", "queue_empty", "queue_full", "bank")}
+              for c in ("busy", "dep", "queue_empty", "queue_full", "bank",
+                        "cq_empty", "cq_full", "dma")}
     for u in Unit
 }
 
 #: per-unit stall key for a TCDM bank conflict (``core.cluster``)
 BANK_STALL_KEYS = {u: _STALL_KEYS[u.value]["bank"] for u in Unit}
+#: per-unit stall keys for the cluster communication causes (``core.cluster``)
+CQ_EMPTY_STALL_KEYS = {u: _STALL_KEYS[u.value]["cq_empty"] for u in Unit}
+CQ_FULL_STALL_KEYS = {u: _STALL_KEYS[u.value]["cq_full"] for u in Unit}
+DMA_STALL_KEYS = {u: _STALL_KEYS[u.value]["dma"] for u in Unit}
 
 #: dense indices for the hot-path list layouts (enum-keyed dicts hash the
 #: member on every access; a list index does not)
@@ -166,6 +200,18 @@ class Instr:
     sample: int = -1                      # -1 => overhead instruction
     fn: Optional[Callable[..., Any]] = None
     extra_energy: float = 0.0             # e.g. SSR stream read on behalf
+    #: inter-core channel index for CQ_PUSH / CQ_POP.  The channel gate,
+    #: value transport and energy live entirely in the cluster core steppers
+    #: (``core.cluster``); the single-core engines treat these ops as plain
+    #: register moves, so ``None`` (every non-cluster program) changes
+    #: nothing.
+    cq: Optional[int] = None
+    #: words moved by a DMA_START transfer (0 for every other kind)
+    dma_words: int = 0
+    #: TCDM access served from a DMA-staged local buffer: exempt from bank
+    #: arbitration and interconnect energy in a cluster (the DMA already
+    #: paid the interconnect crossing per word, ``E_DMA_WORD``)
+    local: bool = False
 
     # cached: Instr is immutable and these are hammered by both the list
     # schedulers (transform._interleave) and the simulator issue loop

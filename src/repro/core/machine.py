@@ -87,9 +87,19 @@ class Program:
     init_env: Dict[str, Any] = field(default_factory=dict)
     output_values: List[str] = field(default_factory=list)  # SSA ids
     frep: bool = False               # FP stream replayed from the loop buffer
+    #: kernel name before any per-core decoration (``transform`` partitioning
+    #: names per-core programs ``f"{base}@core{c}/{n}"``); ``None`` means the
+    #: program was never partitioned and ``name`` *is* the base name.  Kept
+    #: explicit so cluster results never have to parse user-given names.
+    base_name: Optional[str] = None
 
     def total_instrs(self) -> int:
         return sum(len(v) for v in self.streams.values())
+
+    @property
+    def kernel_name(self) -> str:
+        """The undecorated kernel name this program was lowered from."""
+        return self.base_name if self.base_name is not None else self.name
 
 
 @dataclass

@@ -14,8 +14,8 @@ import operator
 from typing import Dict, Iterable, List, Sequence, TextIO, Union
 
 from .metrics import group_by
-from .sweep import (CSV_FIELDS, LEGACY_CSV_FIELDS, SweepRecord,
-                    record_to_row)
+from .sweep import (CSV_FIELDS, LEGACY_CSV_FIELDS, PRE_PIPELINE_CSV_FIELDS,
+                    SweepRecord, record_to_row)
 
 
 def dominates(a: SweepRecord, b: SweepRecord,
@@ -88,7 +88,8 @@ def _parse_stalls(packed: str) -> Dict[str, int]:
 _OPT_INT = ("unroll_int", "queue_depth_i2f", "queue_depth_f2i", "tcdm_banks")
 _INT = ("queue_depth", "queue_latency", "unroll", "n_samples", "cycles",
         "instrs_int", "instrs_fp", "max_occ_i2f", "max_occ_f2i",
-        "fifo_violations", "n_cores", "bank_stalls")
+        "fifo_violations", "n_cores", "bank_stalls", "cq_depth",
+        "dma_buffers", "cq_stalls", "dma_stalls")
 _FLOAT = ("ipc", "energy", "power", "throughput", "efficiency",
           "ipc_per_core")
 
@@ -97,14 +98,21 @@ def row_to_record(row: Dict[str, str]) -> SweepRecord:
     """Inverse of ``sweep.record_to_row`` — exact for every field (floats
     survive because ``str(float)`` is repr-round-trippable).
 
-    Rows from PR-2-era CSVs (no cluster columns) parse too: absent cluster
-    fields default to the single-PE machine (``n_cores=1``, conflict-free
-    TCDM, per-core IPC == aggregate IPC)."""
+    Rows from older CSVs parse too: PR-2-era rows (no cluster columns)
+    default to the single-PE machine (``n_cores=1``, conflict-free TCDM,
+    per-core IPC == aggregate IPC), and PR-5-era rows (no pipeline columns)
+    default to the work-partitioned cluster (``pipeline=False`` with the
+    default channel/DMA geometry)."""
     kw: Dict[str, object] = dict(row)
     kw.setdefault("n_cores", "1")
     kw.setdefault("tcdm_banks", "")
     kw.setdefault("bank_stalls", "0")
     kw.setdefault("ipc_per_core", row.get("ipc", "0.0"))
+    kw.setdefault("pipeline", "0")
+    kw.setdefault("cq_depth", "4")
+    kw.setdefault("dma_buffers", "2")
+    kw.setdefault("cq_stalls", "0")
+    kw.setdefault("dma_stalls", "0")
     for f in _INT:
         kw[f] = int(kw[f])
     for f in _OPT_INT:
@@ -112,6 +120,7 @@ def row_to_record(row: Dict[str, str]) -> SweepRecord:
     for f in _FLOAT:
         kw[f] = float(kw[f])
     kw["equivalent"] = bool(int(row["equivalent"]))
+    kw["pipeline"] = bool(int(kw["pipeline"]))
     kw["stalls"] = _parse_stalls(row["stalls"])
     return SweepRecord(**kw)     # type: ignore[arg-type]
 
@@ -119,15 +128,17 @@ def row_to_record(row: Dict[str, str]) -> SweepRecord:
 def read_csv(src: Union[str, TextIO]) -> List[SweepRecord]:
     """Re-parse a :func:`write_csv` emission back into sweep records; the
     round trip is lossless (tested in ``tests/test_calibration.py``).
-    Accepts the current header and the PR-2-era one without the cluster
-    columns (those records come back with ``n_cores=1`` defaults)."""
+    Accepts the current header plus the two prior generations: the PR-5-era
+    one without the pipeline columns and the PR-2-era one without the
+    cluster columns (older records come back with defaulted new fields)."""
     def _load(fh: TextIO) -> List[SweepRecord]:
         reader = csv.DictReader(fh)
         header = tuple(reader.fieldnames or ())
-        if header not in (CSV_FIELDS, LEGACY_CSV_FIELDS):
+        if header not in (CSV_FIELDS, PRE_PIPELINE_CSV_FIELDS,
+                          LEGACY_CSV_FIELDS):
             raise ValueError(
                 f"CSV header {reader.fieldnames} != expected {CSV_FIELDS} "
-                f"(or the legacy pre-cluster layout)")
+                f"(or the pre-pipeline / pre-cluster legacy layouts)")
         return [row_to_record(row) for row in reader]
 
     if isinstance(src, str):

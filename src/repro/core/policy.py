@@ -66,6 +66,14 @@ class OperatingPoint:
     #: single PE; cluster-level calibration artifacts populate these.
     n_cores: int = 1
     tcdm_banks: Optional[int] = None
+    #: pipelined-cluster geometry (``transform.partition_pipeline`` +
+    #: ``core.cluster``): producer/consumer core pairing over inter-core
+    #: channels, the channel FIFO depth, and the producer's DMA
+    #: double-buffering degree.  The paper's headline point is a single
+    #: work-partitioned PE, so the defaults leave the fabric unused.
+    pipeline: bool = False
+    cq_depth: int = 4
+    dma_buffers: int = 2
     source: str = "default"
 
     def effective_depths(self) -> "tuple[int, int]":

@@ -41,7 +41,8 @@ from .isa import Queue
 from .machine import DeadlockError, ENGINES, MachineConfig, stepper_for
 from .metrics import best, geomean, group_by
 from .policy import ExecutionPolicy
-from .transform import TransformConfig, lower, partition_kernel
+from .transform import (TransformConfig, lower, partition_kernel,
+                        partition_pipeline)
 
 
 @dataclass(frozen=True)
@@ -67,6 +68,15 @@ class SweepPoint:
     #: the single-PE machine, bit-identical to the plain stepper.
     n_cores: int = 1
     tcdm_banks: Optional[int] = None
+    #: pipelined-cluster axes (PR-6, ``transform.partition_pipeline``):
+    #: ``pipeline=True`` splits each core pair into an INT producer streaming
+    #: operands over inter-core channels to an FP-heavy consumer.
+    #: ``cq_depth`` bounds the channel FIFOs (runtime property, like
+    #: ``tcdm_banks``); ``dma_buffers`` is the producer's double-buffering
+    #: degree (a schedule property — it shapes the lowered program).
+    pipeline: bool = False
+    cq_depth: int = 4
+    dma_buffers: int = 2
 
     def effective_depths(self) -> Tuple[int, int]:
         return (self.queue_depth_i2f or self.queue_depth,
@@ -74,7 +84,7 @@ class SweepPoint:
 
     @property
     def clustered(self) -> bool:
-        return self.n_cores > 1 or self.tcdm_banks is not None
+        return self.n_cores > 1 or self.tcdm_banks is not None or self.pipeline
 
 
 @dataclass
@@ -112,6 +122,14 @@ class SweepRecord:
     tcdm_banks: Optional[int] = None
     ipc_per_core: float = 0.0
     bank_stalls: int = 0
+    #: pipelined-cluster columns (PR-6): the pipeline/channel/DMA geometry
+    #: plus the cycles lost to channel back-pressure (``*_cq_empty`` +
+    #: ``*_cq_full``) and to DMA waits (``*_dma``)
+    pipeline: bool = False
+    cq_depth: int = 4
+    dma_buffers: int = 2
+    cq_stalls: int = 0
+    dma_stalls: int = 0
     stalls: Dict[str, int] = field(default_factory=dict)
 
     @property
@@ -126,13 +144,21 @@ CSV_FIELDS: Tuple[str, ...] = (
     "efficiency", "instrs_int", "instrs_fp", "max_occ_i2f", "max_occ_f2i",
     "fifo_violations", "equivalent", "engine", "queue_depth_i2f",
     "queue_depth_f2i", "n_cores", "tcdm_banks", "ipc_per_core", "bank_stalls",
+    "pipeline", "cq_depth", "dma_buffers", "cq_stalls", "dma_stalls",
     "stalls", "detail",
 )
+
+#: the PR-5-era column set (cluster axes but no pipeline/channel/DMA ones);
+#: ``core.pareto.read_csv`` still accepts it, defaulting the pipeline columns
+PRE_PIPELINE_CSV_FIELDS: Tuple[str, ...] = tuple(
+    f for f in CSV_FIELDS
+    if f not in ("pipeline", "cq_depth", "dma_buffers", "cq_stalls",
+                 "dma_stalls"))
 
 #: the PR-2/PR-3-era column set (no cluster axes); ``core.pareto.read_csv``
 #: still accepts it, defaulting the cluster columns (n_cores=1)
 LEGACY_CSV_FIELDS: Tuple[str, ...] = tuple(
-    f for f in CSV_FIELDS
+    f for f in PRE_PIPELINE_CSV_FIELDS
     if f not in ("n_cores", "tcdm_banks", "ipc_per_core", "bank_stalls"))
 
 
@@ -147,7 +173,10 @@ def grid(kernels: Optional[Sequence[str]] = None,
          i2f_depths: Sequence[Optional[int]] = (None,),
          f2i_depths: Sequence[Optional[int]] = (None,),
          n_cores: Sequence[int] = (1,),
-         tcdm_banks: Sequence[Optional[int]] = (None,)) -> List[SweepPoint]:
+         tcdm_banks: Sequence[Optional[int]] = (None,),
+         pipelines: Sequence[bool] = (False,),
+         cq_depths: Sequence[int] = (4,),
+         dma_buffers: Sequence[int] = (2,)) -> List[SweepPoint]:
     """Enumerate the cartesian configuration grid as sweep points.
 
     ``i2f_depths``/``f2i_depths`` add asymmetric FIFO geometries: each non-
@@ -156,7 +185,13 @@ def grid(kernels: Optional[Sequence[str]] = None,
 
     ``n_cores``/``tcdm_banks`` are the cluster axes (``core.cluster``):
     core counts sharing the TCDM and bank counts (None = conflict-free).
-    The defaults keep every existing grid a single-PE grid."""
+    The defaults keep every existing grid a single-PE grid.
+
+    ``pipelines``/``cq_depths``/``dma_buffers`` are the pipelined-cluster
+    axes (PR-6): producer/consumer core pairing over inter-core channels,
+    channel FIFO depth, and the producer's DMA double-buffering degree.
+    Pipelined points require an even ``n_cores >= 2`` and the COPIFTv2
+    policy — other combinations come back as ``status="rejected"``."""
     ks = list(kernels) if kernels else sorted(KERNELS)
     ps = list(policies) if policies else list(ExecutionPolicy)
     unknown = [k for k in ks if k not in KERNELS]
@@ -169,15 +204,23 @@ def grid(kernels: Optional[Sequence[str]] = None,
     if any(nb is not None and nb < 1 for nb in tcdm_banks):
         raise ValueError(
             f"tcdm_banks axis must be positive or None: {tuple(tcdm_banks)}")
+    if any(cd < 1 for cd in cq_depths):
+        raise ValueError(f"cq_depths axis must be positive: {tuple(cq_depths)}")
+    if any(db < 1 for db in dma_buffers):
+        raise ValueError(
+            f"dma_buffers axis must be positive: {tuple(dma_buffers)}")
     return [
         SweepPoint(kernel=k, policy=ExecutionPolicy.parse(p).value,
                    queue_depth=d, queue_latency=lat, unroll=u, unroll_int=ui,
                    n_samples=n_samples, engine=engine,
                    queue_depth_i2f=di, queue_depth_f2i=df,
-                   n_cores=nc, tcdm_banks=nb)
-        for k, p, d, lat, u, ui, di, df, nc, nb in itertools.product(
+                   n_cores=nc, tcdm_banks=nb,
+                   pipeline=pl, cq_depth=cd, dma_buffers=db)
+        for k, p, d, lat, u, ui, di, df, nc, nb, pl, cd, db in
+        itertools.product(
             ks, ps, queue_depths, queue_latencies, unrolls, unroll_ints,
-            i2f_depths, f2i_depths, n_cores, tcdm_banks)
+            i2f_depths, f2i_depths, n_cores, tcdm_banks, pipelines,
+            cq_depths, dma_buffers)
     ]
 
 
@@ -203,9 +246,12 @@ def _lower_key(pt: SweepPoint) -> Tuple:
     ``TransformConfig.lowering_key``): ``queue_latency`` never matters, and
     ``queue_depth`` only matters for depth-sensitive policies.  ``n_cores``
     shapes the partitioned per-core programs; ``tcdm_banks`` is purely a
-    runtime (machine) property."""
+    runtime (machine) property.  ``pipeline``/``dma_buffers`` shape the
+    producer/consumer programs; ``cq_depth`` is runtime-only (like
+    ``tcdm_banks``)."""
     policy = ExecutionPolicy.parse(pt.policy)
-    return (pt.kernel, pt.n_cores) + _tcfg_for(pt).lowering_key(policy)
+    pipe = (pt.pipeline, pt.dma_buffers if pt.pipeline else 0)
+    return (pt.kernel, pt.n_cores) + pipe + _tcfg_for(pt).lowering_key(policy)
 
 
 @functools.lru_cache(maxsize=64)
@@ -231,12 +277,23 @@ def _partition_cached(kernel: str, policy_value: str, tcfg: TransformConfig,
                                   tcfg, n_cores))
 
 
+@functools.lru_cache(maxsize=64)
+def _pipeline_cached(kernel: str, tcfg: TransformConfig, n_cores: int,
+                     dma_buffers: int) -> Tuple:
+    """Memoized ``partition_pipeline()`` (producer/consumer pairing is
+    COPIFTv2-only, so no policy key); raises ValueError like the uncached
+    call."""
+    return tuple(partition_pipeline(KERNELS[kernel], tcfg, n_cores,
+                                    dma_buffers=dma_buffers))
+
+
 def clear_worker_caches() -> None:
     """Drop this process's lowering/reference memos (benchmark hygiene)."""
     from . import transform
     _lower_cached.cache_clear()
     _reference_cached.cache_clear()
     _partition_cached.cache_clear()
+    _pipeline_cached.cache_clear()
     transform._V2_PREFIX_CACHE.clear()
     transform._PARTITION_CACHE.clear()
 
@@ -251,7 +308,8 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
     """
     dfg = KERNELS[pt.kernel]
     policy = ExecutionPolicy.parse(pt.policy)
-    if pt.n_cores < 1 or (pt.tcdm_banks is not None and pt.tcdm_banks < 1):
+    if (pt.n_cores < 1 or (pt.tcdm_banks is not None and pt.tcdm_banks < 1)
+            or pt.cq_depth < 1 or pt.dma_buffers < 1):
         # a malformed cluster geometry must yield one rejected record, not a
         # raw traceback killing a pool worker (and an n_cores=0 point must
         # never masquerade as a cheap single-PE run in a calibration sweep)
@@ -263,16 +321,21 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
             queue_depth_i2f=pt.queue_depth_i2f,
             queue_depth_f2i=pt.queue_depth_f2i,
             n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
+            pipeline=pt.pipeline, cq_depth=pt.cq_depth,
+            dma_buffers=pt.dma_buffers,
             status="rejected",
             detail=f"invalid cluster geometry: n_cores={pt.n_cores}, "
-                   f"tcdm_banks={pt.tcdm_banks}")
+                   f"tcdm_banks={pt.tcdm_banks}, cq_depth={pt.cq_depth}, "
+                   f"dma_buffers={pt.dma_buffers}")
     base = dict(kernel=pt.kernel, policy=policy.value,
                 queue_depth=pt.queue_depth, queue_latency=pt.queue_latency,
                 unroll=pt.unroll, unroll_int=pt.unroll_int,
                 n_samples=pt.n_samples, engine=pt.engine,
                 queue_depth_i2f=pt.queue_depth_i2f,
                 queue_depth_f2i=pt.queue_depth_f2i,
-                n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks)
+                n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
+                pipeline=pt.pipeline, cq_depth=pt.cq_depth,
+                dma_buffers=pt.dma_buffers)
     tcfg = _tcfg_for(pt)
     if policy not in TransformConfig.DEPTH_SENSITIVE_POLICIES:
         # depth is not transform-relevant here: normalize it out of the memo
@@ -323,10 +386,25 @@ def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
     """The cluster leg of :func:`run_point`: partition the kernel across
     ``pt.n_cores``, run the per-core programs under the shared bank arbiter,
     and check the *concatenated* per-core outputs against the sequential
-    interpreter (disjoint sample ranges: core ``c`` owns samples
-    ``[c*chunk, (c+1)*chunk)``)."""
+    interpreter.  Work-partitioned points assign disjoint sample ranges per
+    core (core ``c`` owns ``[c*chunk, (c+1)*chunk)``); pipelined points
+    assign them per producer/consumer *pair* — only the odd-indexed
+    (consumer) cores hold outputs."""
     try:
-        if use_caches:
+        if pt.pipeline:
+            if policy is not ExecutionPolicy.COPIFTV2:
+                return SweepRecord(
+                    **base, status="rejected",
+                    detail=f"pipeline partitioning is COPIFTv2-only "
+                           f"(got policy {policy.value!r})")
+            if use_caches:
+                progs = _pipeline_cached(pt.kernel, tcfg, pt.n_cores,
+                                         pt.dma_buffers)
+            else:
+                progs = partition_pipeline(dfg, tcfg, pt.n_cores,
+                                           dma_buffers=pt.dma_buffers,
+                                           use_prefix_cache=False)
+        elif use_caches:
             progs = _partition_cached(pt.kernel, policy.value, tcfg,
                                       pt.n_cores)
         else:
@@ -335,19 +413,25 @@ def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
     except ValueError as e:
         return SweepRecord(**base, status="rejected", detail=str(e))
     ccfg = ClusterConfig(n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
-                         machine=mcfg)
+                         machine=mcfg, cq_depth=pt.cq_depth,
+                         dma_buffers=pt.dma_buffers)
     try:
         res = ClusterStepper(progs, ccfg, engine=pt.engine).run()
     except DeadlockError as e:
         return SweepRecord(**base, status="deadlock", detail=str(e))
     ref = (_reference_cached(pt.kernel, pt.n_samples) if use_caches
            else dfg.eval_reference(pt.n_samples))
-    chunk = pt.n_samples // pt.n_cores
+    if pt.pipeline:
+        # outputs live on the consumer cores (odd indices), one per pair
+        owners = res.core_results[1::2]
+    else:
+        owners = res.core_results
+    chunk = pt.n_samples // len(owners)
     equivalent = all(
         [core.env.get(f"{node.name}@{i}") for i in range(chunk)]
         == ref[node.name][c * chunk:(c + 1) * chunk]
         for node in dfg.outputs()
-        for c, core in enumerate(res.core_results))
+        for c, core in enumerate(owners))
     s = res.summary()
     return SweepRecord(
         **base, status="ok", cycles=s["cycles"], ipc=s["ipc"],
@@ -356,7 +440,8 @@ def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
         instrs_fp=s["instrs_fp"], max_occ_i2f=s["max_occ_i2f"],
         max_occ_f2i=s["max_occ_f2i"], fifo_violations=s["fifo_violations"],
         equivalent=equivalent, ipc_per_core=s["ipc_per_core"],
-        bank_stalls=s["bank_stalls"], stalls=s["stalls"])
+        bank_stalls=s["bank_stalls"], cq_stalls=s["cq_stalls"],
+        dma_stalls=s["dma_stalls"], stalls=s["stalls"])
 
 
 def partition_points(points: Sequence[SweepPoint],
@@ -460,4 +545,5 @@ def record_to_row(rec: SweepRecord) -> Dict[str, object]:
     d = asdict(rec)
     d["stalls"] = ";".join(f"{k}={v}" for k, v in sorted(rec.stalls.items()))
     d["equivalent"] = int(rec.equivalent)
+    d["pipeline"] = int(rec.pipeline)
     return {k: d[k] for k in CSV_FIELDS}

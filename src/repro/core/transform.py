@@ -85,11 +85,12 @@ class _Builder:
 
     def instr(self, kind: OpKind, label: str, srcs=(), dst=None, pushes=(),
               push_val=None, sample=-1, fn=None, extra_energy=0.0,
-              expects=()) -> Instr:
+              expects=(), cq=None, dma_words=0, local=False) -> Instr:
         return Instr(uid=next(self._uid), kind=kind, label=label,
                      srcs=tuple(srcs), dst=dst, pushes=tuple(pushes),
                      push_val=push_val, sample=sample, fn=fn,
-                     extra_energy=extra_energy, expects=tuple(expects))
+                     extra_energy=extra_energy, expects=tuple(expects),
+                     cq=cq, dma_words=dma_words, local=local)
 
 
 def _identity(x):
@@ -971,9 +972,184 @@ def partition_kernel(dfg: LoopDFG, policy: "ExecutionPolicy",
     while chunk % batch:              # COPIFT needs batch | n_samples
         batch -= 1
     sub_cfg = replace(cfg, n_samples=chunk, batch=batch)
-    return [lower(_core_dfg(dfg, c, n_cores, chunk), policy, sub_cfg,
-                  use_prefix_cache)
-            for c in range(n_cores)]
+    progs = [lower(_core_dfg(dfg, c, n_cores, chunk), policy, sub_cfg,
+                   use_prefix_cache)
+             for c in range(n_cores)]
+    for p in progs:
+        # carried explicitly so cluster results never parse user-given
+        # names (which may themselves contain "@core")
+        p.base_name = dfg.name
+    return progs
+
+
+# ---------------------------------------------------------------------------
+# Pipeline partitioning: heterogeneous producer/consumer core pairs
+# ---------------------------------------------------------------------------
+
+def _stage_dma_loads(stream: List[Instr], b: _Builder, cfg: TransformConfig,
+                     dma_buffers: int, chan: int) -> List[Instr]:
+    """Rewrite the producer stream's loads into DMA-staged local reads.
+
+    Consecutive loads are grouped (one unroll window's worth per transfer);
+    group ``g`` is brought in by a ``DMA_START`` issued ``dma_buffers``
+    groups ahead (the rotating-buffer prologue starts the first
+    ``dma_buffers`` transfers), and a ``DMA_WAIT`` in front of the group's
+    first load blocks until the data has landed.  The loads themselves are
+    marked ``local`` — they read the staged buffer, exempt from bank
+    arbitration and interconnect energy — and take the wait's token as an
+    extra dependency so the functional interpreter preserves ordering."""
+    loads = [k for k, ins in enumerate(stream) if ins.kind is OpKind.LW]
+    if not loads:
+        return stream
+    samples = {stream[k].sample for k in loads if stream[k].sample >= 0}
+    per_sample = max(1, len(loads) // max(1, len(samples)))
+    group_size = max(1, (cfg.unroll_int or cfg.unroll) * per_sample)
+    n_groups = (len(loads) + group_size - 1) // group_size
+    group_of = {idx: j // group_size for j, idx in enumerate(loads)}
+    words = [min(group_size, len(loads) - g * group_size)
+             for g in range(n_groups)]
+
+    def start(g: int) -> Instr:
+        return b.instr(OpKind.DMA_START, f"dma:start{chan}:{g}",
+                       dma_words=words[g])
+
+    def wait(g: int) -> Instr:
+        return b.instr(OpKind.DMA_WAIT, f"dma:wait{chan}:{g}",
+                       dst=f"dma{chan}:{g}", fn=lambda: 0)
+
+    out: List[Instr] = [start(g) for g in range(min(dma_buffers, n_groups))]
+    seen: set = set()
+    for idx, ins in enumerate(stream):
+        g = group_of.get(idx)
+        if g is None:
+            out.append(ins)
+            continue
+        if g not in seen:
+            seen.add(g)
+            out.append(wait(g))
+            if g + dma_buffers < n_groups:
+                out.append(start(g + dma_buffers))
+        tok = f"dma{chan}:{g}"
+        fn = ins.fn
+        wrapped = (lambda *a, _f=fn: _f(*a[1:])) if fn else None
+        out.append(replace(ins, srcs=(tok,) + ins.srcs, fn=wrapped,
+                           local=True))
+    return out
+
+
+def _pipeline_pair(sub: LoopDFG, cfg: TransformConfig, chan: int,
+                   dma_buffers: int, use_prefix_cache: bool,
+                   base: str, core0: int, n_cores: int
+                   ) -> Tuple[Program, Program]:
+    """Split one COPIFTv2 lowering of ``sub`` into a producer/consumer
+    program pair communicating over inter-core channel ``chan``.
+
+    The producer core keeps the v2 *integer* stream with every I2F push
+    rewritten into a ``CQ_PUSH`` (and its loads DMA-staged); the consumer
+    core keeps the v2 *FP* stream verbatim, fed by a ``CQ_POP`` prelude on
+    its integer unit that relays channel entries into the local I2F queue in
+    exactly the producer's push order — so the FP stream's FIFO ``expects``
+    keep verifying value-exact delivery across the cluster."""
+    plan = analyze(sub)
+    if plan.int_receives:
+        raise ValueError(
+            f"{sub.name}: pipeline partitioning needs a one-directional "
+            f"(int -> fp) kernel; {sorted(plan.int_receives)} flow back "
+            "to the integer thread")
+    v2 = lower_copiftv2(sub, cfg, use_prefix_cache)
+    b = _Builder()
+
+    prod_stream: List[Instr] = []
+    push_order: List[str] = []
+    for ins in v2.streams[Unit.INT]:
+        if Queue.I2F not in ins.pushes:
+            prod_stream.append(ins)
+            continue
+        pv = ins.push_val or ins.label
+        if ins.dst is None:
+            # MV re-push shim: becomes the channel push itself
+            prod_stream.append(replace(ins, kind=OpKind.CQ_PUSH, pushes=(),
+                                       cq=chan))
+        else:
+            # producing instruction: keep the register write, relay the
+            # result through the channel with a separate push
+            prod_stream.append(replace(ins, pushes=(), push_val=None))
+            prod_stream.append(b.instr(OpKind.CQ_PUSH, f"cqpush:{pv}",
+                                       (ins.dst,), push_val=pv,
+                                       sample=ins.sample, fn=_identity,
+                                       cq=chan))
+        push_order.append(pv)
+    prod_stream = _stage_dma_loads(prod_stream, b, cfg, dma_buffers, chan)
+
+    magic = f"%cq{chan}"
+    cons_int = [b.instr(OpKind.CQ_POP, f"cqpop:{pv}", (magic,),
+                        pushes=(Queue.I2F,), push_val=pv, expects=(pv,),
+                        fn=_identity, cq=chan)
+                for pv in push_order]
+    cons_env = dict(v2.init_env)
+    cons_env[magic] = 0
+
+    prod = Program(
+        name=f"{base}@core{core0}/{n_cores}",
+        policy=ExecutionPolicy.COPIFTV2, mode="dual",
+        streams={Unit.INT: prod_stream}, n_samples=0,
+        init_env=dict(v2.init_env), output_values=[], frep=False,
+        base_name=base)
+    cons = Program(
+        name=f"{base}@core{core0 + 1}/{n_cores}",
+        policy=ExecutionPolicy.COPIFTV2, mode="dual",
+        streams={Unit.INT: cons_int, Unit.FP: v2.streams[Unit.FP]},
+        n_samples=v2.n_samples, init_env=cons_env,
+        output_values=list(v2.output_values), frep=True, base_name=base)
+    return prod, cons
+
+
+def partition_pipeline(dfg: LoopDFG, cfg: Optional[TransformConfig] = None,
+                       n_cores: int = 2, dma_buffers: int = 2,
+                       use_prefix_cache: bool = True) -> List[Program]:
+    """Split ``dfg`` across ``n_cores`` as producer/consumer *pairs* — the
+    heterogeneous counterpart of :func:`partition_kernel`.
+
+    Core ``2p`` runs the integer (producer) half of pair ``p`` — loads
+    (DMA-double-buffered), index arithmetic, and ``CQ_PUSH`` relays into
+    inter-core channel ``p``; core ``2p + 1`` runs the FP (consumer) half —
+    the unmodified COPIFTv2 FP stream fed from the channel.  Pairs divide
+    the sample range exactly like :func:`partition_kernel` divides it over
+    cores (index-shifted inputs, fast-forwarded loop-carried state), so the
+    concatenated consumer outputs stay bit-identical to the sequential
+    reference.
+
+    ``dma_buffers`` must match the cluster's ``ClusterConfig.dma_buffers``
+    (the lowering pipelines that many transfers; a deeper schedule than the
+    engine sustains deadlocks, which the cluster detector reports).
+
+    Raises ``ValueError`` for odd/insufficient ``n_cores``, a sample count
+    not divisible by the pair count, or a kernel with FP-to-int feedback
+    (pipeline pairs are one-directional by construction).
+    """
+    cfg = cfg or TransformConfig()
+    if n_cores < 2 or n_cores % 2:
+        raise ValueError(
+            f"pipeline partitioning needs an even n_cores >= 2, "
+            f"got {n_cores}")
+    pairs = n_cores // 2
+    n = cfg.n_samples
+    if n % pairs:
+        raise ValueError(
+            f"{dfg.name}: n_samples={n} not divisible by "
+            f"{pairs} pipeline pairs")
+    chunk = n // pairs
+    batch = min(cfg.batch, chunk)
+    while chunk % batch:
+        batch -= 1
+    sub_cfg = replace(cfg, n_samples=chunk, batch=batch)
+    progs: List[Program] = []
+    for p in range(pairs):
+        sub = dfg if pairs == 1 else _core_dfg(dfg, p, pairs, chunk)
+        progs.extend(_pipeline_pair(sub, sub_cfg, p, dma_buffers,
+                                    use_prefix_cache, base=dfg.name,
+                                    core0=2 * p, n_cores=n_cores))
+    return progs
 
 
 # ---------------------------------------------------------------------------

@@ -42,11 +42,17 @@ class StragglerMonitor:
 
 
 class Heartbeat:
-    """Host liveness tracking (simulated clock injectable for tests)."""
+    """Host liveness tracking (simulated clock injectable for tests).
 
-    def __init__(self, hosts: List[str], timeout: float = 60.0):
+    Hosts start their timeout clock at ``start`` (the monitor's creation
+    time), not at an implicit 0.0: a monitor created at a large wall-clock
+    ``now`` must not declare every host dead before any has had a chance
+    to beat."""
+
+    def __init__(self, hosts: List[str], timeout: float = 60.0,
+                 start: float = 0.0):
         self.timeout = timeout
-        self.last: dict = {h: 0.0 for h in hosts}
+        self.last: dict = {h: start for h in hosts}
 
     def beat(self, host: str, now: float) -> None:
         self.last[host] = now

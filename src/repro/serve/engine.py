@@ -87,15 +87,30 @@ class ServeEngine:
         self.pending.append(Request(rid, list(prompt), max_new))
         return rid
 
-    # NOTE: per-slot cache reset on admission is skipped — slots are
-    # length-tracked jointly, so this simple engine admits requests in waves
-    # (all slots start together).  Sufficient for the batched-requests
-    # example; per-slot lengths are the straightforward extension.
+    def _reset_slot_cache(self, i: int) -> None:
+        """Zero slot ``i``'s rows in every cache leaf (batch is axis 1 of
+        every non-scalar leaf; the joint ``len`` scalar is left alone)."""
+        self.cache = {k: (v if v.ndim == 0 else v.at[:, i].set(0))
+                      for k, v in self.cache.items()}
+
+    # Slots are length-tracked jointly (one ``cache["len"]`` scalar), so
+    # this simple engine admits requests in waves: a new wave only starts
+    # once every slot has drained.  At that boundary the whole cache is
+    # re-zeroed (len back to 0) — without it a second wave would attend
+    # over the first wave's stale KV rows at an advanced length and
+    # diverge from a fresh engine.  The per-slot zeroing on admission is
+    # defense in depth for the mid-wave case; per-slot lengths are the
+    # straightforward extension.
     def _admit(self) -> None:
+        if self.pending and not self._active():
+            self.cache = init_cache(self.cfg, len(self.slots), self.max_len,
+                                    jnp.dtype(self.rc.dtype))
+            self._prompt_cursor.clear()
         for i, slot in enumerate(self.slots):
             if slot is None and self.pending:
                 req = self.pending.pop(0)
                 self.slots[i] = req
+                self._reset_slot_cache(i)
                 self._prompt_cursor[i] = 0
 
     def _active(self) -> bool:

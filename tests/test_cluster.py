@@ -30,7 +30,7 @@ from repro.core.sweep import LEGACY_CSV_FIELDS, record_to_row
 FACETS = ("cycles", "energy", "instrs", "stalls", "push_seq", "pop_seq",
           "max_queue_occupancy", "fifo_violations", "env")
 
-#: the default exploration grid (the 288-config space explore.py sweeps)
+#: the default exploration grid (the 336-config space explore.py sweeps)
 DEFAULT_GRID = dict(queue_depths=(1, 2, 4, 8), queue_latencies=(1, 2),
                     unrolls=(4, 8), n_samples=32)
 
@@ -328,3 +328,177 @@ def test_front_diff_detects_drift_and_moves():
     extra = copy.deepcopy(base)
     extra["expf"].append(dict(base["expf"][0], queue_depth=8))
     assert any("appeared" in p for p in diff_fronts(base, extra))
+
+
+# ---------------------------------------------------------------------------
+# PR-6: pipelined producer/consumer clusters (inter-core channels + DMA)
+# ---------------------------------------------------------------------------
+
+def _pipeline_progs(kernel="cluster_matmul", n=64, n_cores=4, dma_buffers=2):
+    from repro.core import partition_pipeline
+    tcfg = TransformConfig(unroll=8, batch=min(32, n), queue_depth=4,
+                           n_samples=n)
+    return partition_pipeline(KERNELS[kernel], tcfg, n_cores,
+                              dma_buffers=dma_buffers,
+                              use_prefix_cache=False)
+
+
+@pytest.mark.tier1
+def test_pipeline_partition_matches_reference_interpreter():
+    """Producer/consumer pairs preserve kernel semantics: the consumer
+    cores' concatenated outputs are bit-identical to the sequential
+    interpreter, with zero FIFO/channel-order violations."""
+    n, n_cores = 64, 4
+    progs = _pipeline_progs(n=n, n_cores=n_cores)
+    res = ClusterStepper(progs, ClusterConfig(n_cores=n_cores, tcdm_banks=2,
+                                              cq_depth=4)).run()
+    assert res.fifo_violations == 0 and res.cq_violations == 0
+    assert res.cq_pushes > 0 and res.cq_pushes == res.cq_pops
+    dfg = KERNELS["cluster_matmul"]
+    ref = dfg.eval_reference(n)
+    consumers = res.core_results[1::2]
+    chunk = n // len(consumers)
+    for node in dfg.outputs():
+        got = [core.env.get(f"{node.name}@{i}")
+               for core in consumers for i in range(chunk)]
+        assert got == ref[node.name]
+
+
+@pytest.mark.tier1
+def test_pipeline_engine_parity_event_vs_cycle():
+    """The event-driven cores agree with the per-cycle reference on every
+    timing/energy/stall facet of a pipelined run — including the degenerate
+    per-cycle stepping the event engine falls back to while channel-blocked."""
+    progs = _pipeline_progs(n=32, n_cores=2, dma_buffers=1)
+    ccfg = ClusterConfig(n_cores=2, tcdm_banks=2, cq_depth=2, dma_buffers=1)
+    ev = ClusterStepper(progs, ccfg, engine="event").run()
+    cy = ClusterStepper(progs, ccfg, engine="cycle").run()
+    assert ev.cycles == cy.cycles
+    assert ev.energy == cy.energy
+    assert ev.stalls == cy.stalls
+    assert ev.cq_pushes == cy.cq_pushes and ev.cq_pops == cy.cq_pops
+    for a, b in zip(ev.core_results, cy.core_results):
+        assert a.env == b.env
+
+
+@pytest.mark.tier1
+def test_pipeline_sweep_point_runs_and_invalid_points_reject():
+    """The sweep spine carries the pipeline axes end to end; infeasible
+    combinations reject instead of raising."""
+    rec = run_point(SweepPoint(kernel="cluster_matmul", policy="copiftv2",
+                               n_samples=64, n_cores=4, tcdm_banks=2,
+                               pipeline=True, cq_depth=4, dma_buffers=2))
+    assert rec.ok and rec.equivalent and rec.fifo_violations == 0
+    assert rec.pipeline and rec.cq_stalls >= 0 and rec.ipc > 0
+    bad_policy = run_point(SweepPoint(kernel="expf", policy="copift",
+                                      n_samples=16, n_cores=2, pipeline=True))
+    assert bad_policy.status == "rejected"
+    odd_cores = run_point(SweepPoint(kernel="expf", policy="copiftv2",
+                                     n_samples=16, n_cores=3, pipeline=True))
+    assert odd_cores.status == "rejected"
+
+
+@pytest.mark.tier1
+def test_cluster_result_channel_columns_sum_the_right_stall_keys():
+    progs = _pipeline_progs(n=64, n_cores=2)
+    res = ClusterStepper(progs, ClusterConfig(n_cores=2, tcdm_banks=2)).run()
+    assert res.cq_stalls == sum(
+        v for k, v in res.stalls.items()
+        if k.endswith(("_cq_empty", "_cq_full")))
+    assert res.dma_stalls == sum(
+        v for k, v in res.stalls.items() if k.endswith("_dma"))
+    s = res.summary()
+    assert s["cq_stalls"] == res.cq_stalls
+    assert s["dma_stalls"] == res.dma_stalls
+    assert s["cq_pushes"] == res.cq_pushes > 0
+
+
+@pytest.mark.tier1
+def test_cross_core_cyclic_channel_deadlock_raises_not_hangs():
+    """Satellite contract: two cores each popping the channel the *other*
+    one would fill is a cross-core cycle the per-core detector must catch
+    (annotated as such), never an infinite hang.  Guarded by a hard alarm
+    so a regression fails instead of wedging the suite."""
+    import signal
+
+    from repro.core import DeadlockError, Instr, OpKind, Program, Unit
+
+    def cyclic_core(core, pop_chan, push_chan):
+        magic = f"%cq{pop_chan}"
+        pop = Instr(uid=0, kind=OpKind.CQ_POP, label=f"pop{core}",
+                    srcs=(magic,), dst=f"v@{core}", fn=lambda v: v,
+                    cq=pop_chan)
+        push = Instr(uid=1, kind=OpKind.CQ_PUSH, label=f"push{core}",
+                     srcs=(f"v@{core}",), push_val=f"v@{core}",
+                     cq=push_chan)
+        return Program(name=f"cyclic@core{core}/2", policy=P.COPIFTV2,
+                       mode="dual", streams={Unit.INT: [pop, push]},
+                       n_samples=0, init_env={magic: 0},
+                       base_name="cyclic")
+
+    progs = [cyclic_core(0, pop_chan=0, push_chan=1),
+             cyclic_core(1, pop_chan=1, push_chan=0)]
+    mcfg = MachineConfig(deadlock_limit=200)
+    signal.alarm(60)                  # hard stop: raising beats hanging
+    try:
+        for engine in ("event", "cycle"):
+            with pytest.raises(DeadlockError, match="cross-core deadlock"):
+                ClusterStepper(progs, ClusterConfig(n_cores=2, machine=mcfg),
+                               engine=engine).run()
+    finally:
+        signal.alarm(0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite contracts: cache hygiene + hostile kernel names
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_banked_cluster_run_leaves_shared_program_state_intact():
+    """Regression guard for skip-table cache poisoning: running a Program
+    under a banked cluster core (which disables per-unit time skipping)
+    must not perturb a later single-core run of the *same object* — it
+    stays bit-identical to a fresh Program on every facet."""
+    tcfg = TransformConfig(n_samples=16, queue_depth=4, unroll=8, batch=16)
+    mcfg = MachineConfig()
+    shared = lower(KERNELS["histf"], P.COPIFTV2, tcfg, use_prefix_cache=False)
+    fresh = lower(KERNELS["histf"], P.COPIFTV2, tcfg, use_prefix_cache=False)
+    baseline = Stepper(fresh, mcfg).run()
+    ClusterStepper([shared], ClusterConfig(n_cores=1, tcdm_banks=2,
+                                           machine=mcfg)).run()
+    after = Stepper(shared, mcfg).run()
+    for facet in FACETS:
+        assert getattr(after, facet) == getattr(baseline, facet), facet
+
+
+@pytest.mark.tier1
+def test_hostile_kernel_name_containing_at_core_round_trips():
+    """A user kernel whose name itself contains "@core" must survive
+    partition -> cluster -> sweep CSV intact: the cluster result reports
+    the carried base name, never a parse of the decorated per-core one."""
+    import copy as _copy
+
+    hostile = "evil@core0/8"
+    dfg = _copy.copy(KERNELS["expf"])
+    dfg.name = hostile
+    tcfg = TransformConfig(n_samples=16, queue_depth=4, unroll=8, batch=16)
+    progs = partition_kernel(dfg, P.COPIFTV2, tcfg, 2,
+                             use_prefix_cache=False)
+    assert [p.name for p in progs] == [f"{hostile}@core0/2",
+                                       f"{hostile}@core1/2"]
+    res = ClusterStepper(progs, ClusterConfig(n_cores=2)).run()
+    assert res.name == hostile
+    KERNELS[hostile] = dfg
+    try:
+        recs = run_sweep(grid(kernels=[hostile], policies=[P.COPIFTV2],
+                              queue_depths=(4,), queue_latencies=(1,),
+                              unrolls=(8,), n_samples=16, n_cores=(2,)),
+                         workers=1)
+        assert all(r.ok and r.equivalent for r in recs)
+        buf = io.StringIO()
+        write_csv(recs, buf)
+        buf.seek(0)
+        back = read_csv(buf)
+        assert back == recs and all(r.kernel == hostile for r in back)
+    finally:
+        del KERNELS[hostile]

@@ -231,3 +231,35 @@ def test_serve_engine_batched_requests():
     for r in done.values():
         assert len(r.generated) == 4
         assert all(0 <= t < cfg.vocab for t in r.generated)
+
+
+def test_heartbeat_no_false_dead_on_startup():
+    """A monitor created at a large wall-clock time must give every host a
+    full timeout window before declaring it dead — the last-beat table is
+    seeded from the start time, not an implicit 0.0."""
+    from repro.runtime.straggler import Heartbeat
+    hb = Heartbeat(["h0", "h1"], timeout=10.0, start=1000.0)
+    assert hb.dead(1005.0) == []            # nobody has beaten yet: alive
+    hb.beat("h0", 1009.0)
+    assert hb.dead(1011.0) == ["h1"]        # h1 never beat, window expired
+    assert hb.dead(1030.0) == ["h0", "h1"]  # h0's beat aged out too
+
+
+def test_serve_engine_second_wave_matches_fresh_engine():
+    """Readmission must not reuse stale KV state: a request served in the
+    second wave of a 2-slot engine generates the same tokens as the same
+    request on a fresh engine."""
+    cfg = _cfg()
+    params = init_model_params(KEY, cfg)
+    prompt, max_new = [7, 3, 9, 1], 5
+
+    eng = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64)
+    eng.submit([1, 2, 3], max_new=4)
+    eng.submit([4, 5, 6], max_new=4)
+    eng.run()                               # wave 1 drains all slots
+    rid = eng.submit(prompt, max_new=max_new)
+    second_wave = eng.run()[rid].generated
+
+    fresh = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64)
+    rid_f = fresh.submit(prompt, max_new=max_new)
+    assert second_wave == fresh.run()[rid_f].generated

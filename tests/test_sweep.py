@@ -227,12 +227,12 @@ def test_sweep_summary_and_csv(tmp_path):
 
 @pytest.mark.slow
 def test_full_grid_sweep_all_equivalent():
-    """The full default exploration grid (288 configs): everything simulates
+    """The full default exploration grid (336 configs): everything simulates
     and matches the interpreter.  Slow; the tier-1 proxy is the sampled
     fuzz above plus the benchmark smoke gate."""
     recs = run_sweep(grid(queue_depths=DEPTHS, queue_latencies=(1, 2),
                           unrolls=(4, 8), n_samples=32))
-    assert len(recs) == 288
+    assert len(recs) == 336
     assert all(r.ok and r.equivalent and not r.fifo_violations for r in recs)
 
 
@@ -360,8 +360,9 @@ def test_benchmarks_run_smoke():
     assert "sweep_perf_speedup_event_cached" in res.stdout
     assert "calibration_expf_ipc_gain" in res.stdout
     assert "cluster_headline_speedup_4c" in res.stdout
+    assert "cluster_pipeline_cluster_matmul_x4_ipc_ratio" in res.stdout
     assert "front_diff_drift_findings" in res.stdout
     # per-section pass/fail summary: every section reports, none failed
     assert "# --- summary ---" in res.stdout
     assert "# FAIL" not in res.stdout
-    assert res.stdout.count("# PASS:") == 6
+    assert res.stdout.count("# PASS:") == 7
