@@ -43,12 +43,14 @@ def main(argv=None) -> None:
 
     if args.smoke:
         from . import (calibration, cluster_pipeline, cluster_scaling, dse,
-                       fig3, front_diff, sweep_perf)
+                       fig3, front_diff, sweep_perf, sweep_scale)
         _run_sections([
             ("fig3 smoke (machine model, small n)", fig3.smoke),
             ("dse smoke (tiny sweep grid + equivalence fuzz)", dse.smoke),
             ("sweep_perf smoke (event vs cycle engine throughput)",
              sweep_perf.smoke),
+            ("sweep_scale smoke (batch engine parity + adaptive front "
+             "cover)", sweep_scale.smoke),
             ("calibration smoke (Pareto-selected vs hard-coded default)",
              calibration.smoke),
             ("cluster scaling smoke (weak/strong 1-4 cores + bank "
@@ -62,12 +64,14 @@ def main(argv=None) -> None:
 
     from . import (calibration, cluster_pipeline, cluster_scaling,
                    collective_policy, dse, fig3, front_diff, kernel_bench,
-                   roofline_table, sweep_perf)
+                   roofline_table, sweep_perf, sweep_scale)
     _run_sections([
         ("fig3 (paper Fig.3a/b/c via the machine model)", fig3.main),
         ("dse (design-space sweep + Pareto fronts)", dse.main),
         ("sweep_perf (DSE points/sec, event vs cycle engine)",
          sweep_perf.main),
+        ("sweep_scale (batch engine >=10x gate + adaptive front cover)",
+         sweep_scale.main),
         ("calibration (Pareto-selected operating points vs defaults)",
          calibration.main),
         ("cluster scaling (weak/strong 1-8 cores + bank contention)",

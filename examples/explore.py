@@ -6,8 +6,11 @@ full sweep and the fronts as CSV, and re-checks on *every* swept point that
 the lowered program computes bit-identical outputs to the sequential baseline
 interpreter — the sweep doubles as the repo's largest semantics fuzzer.
 
-Usage (defaults sweep 336 configurations: 7 kernels x 3 policies x
-4 depths x 2 latencies x 2 unrolls):
+Usage (defaults sweep 7560 configurations: 7 kernels x 3 policies x
+5 depths x 4 latencies x 2 unrolls x 3x3 asymmetric overrides — thousands
+of points are the PR-7 baseline now that the batch engine advances every
+point sharing a lowered program in one vectorized pass; an estimated-cost
+line prints before the sweep launches):
 
     PYTHONPATH=src python examples/explore.py
     PYTHONPATH=src python examples/explore.py \
@@ -41,12 +44,22 @@ degree.  Pipelined points need an even core count and the COPIFTv2 policy
         --kernels cluster_matmul --policies copiftv2 --pipeline both \
         --cores 2,4 --banks 2,8 --cq-depths 2,4,8 --dma-buffers 1,2,4
 
-``--engine`` picks the simulation core: ``event`` (default) is the
-event-driven time-skip engine — bit-identical to ``cycle`` (the naive
-per-cycle reference stepper) but skips fully-stalled stretches, so big
-high-latency grids finish in host time O(instructions) rather than
-O(cycles).  A timing report (wall time, points/sec, ms/config) prints either
-way; ``--engine cycle`` exists for differential checking and benchmarking.
+``--engine`` picks the simulation core: ``batch`` (default) groups every
+point sharing a lowered program and advances the whole group in one numpy
+max-recurrence pass (``core.batch_machine``) — bit-identical to ``event``
+(the per-point event-driven time-skip engine), which is in turn
+bit-identical to ``cycle`` (the naive per-cycle reference stepper).
+Clustered points and batch-inexpressible programs fall back to the event
+engine automatically.  A timing report (wall time, points/sec, ms/config)
+prints either way; ``--engine event``/``cycle`` exist for differential
+checking and benchmarking.
+
+``--strategy`` picks the search discipline: ``exhaustive`` (default)
+evaluates every grid point; ``adaptive`` runs front-guided successive
+halving (``core.search``) — coarse low-fidelity rungs prune points more
+than ``--search-tolerance`` beyond the running per-kernel Pareto fronts,
+and only survivors are re-simulated at full fidelity (their records are
+exact; pruned points simply don't appear in the output CSVs).
 
 Outputs ``sweep.csv`` (every record) and ``pareto.csv`` (front members only)
 under ``--out-dir``; exits non-zero if any configuration fails the
@@ -86,14 +99,29 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (ENGINES, KERNELS, ExecutionPolicy, calibrate,
-                        format_front, grid, pareto_by_kernel,
-                        resolve_workers, run_sweep, sweep_summary, write_csv)
+from repro.core import (KERNELS, STRATEGIES, SWEEP_ENGINES, ExecutionPolicy,
+                        calibrate, format_front, grid, pareto_by_kernel,
+                        resolve_workers, run_search, sweep_summary, write_csv)
 from repro.core.calibrate import OBJECTIVES, calibration_dir
+from repro.core.search import DEFAULT_LADDER, DEFAULT_TOLERANCE
+
+#: rough single-worker engine rates (points/sec) for the estimated-cost
+#: line, from ``artifacts/BENCH_sweep_scale.json`` on the 2880-pt grid —
+#: an expectation-setter before a long sweep launches, not a promise
+NOMINAL_RATES = {"batch": 4000.0, "event": 180.0, "cycle": 45.0}
 
 
 def _ints(s):
     return tuple(int(x) for x in s.split(",") if x)
+
+
+def _estimated_cost_line(n_points, engine, workers, strategy):
+    rate = NOMINAL_RATES.get(engine, NOMINAL_RATES["event"]) * max(1, workers)
+    note = (" (adaptive search prunes dominated points after the first "
+            "low-fidelity rung)" if strategy == "adaptive" else "")
+    return (f"estimated cost: {n_points} points / ~{rate:.0f} pts/s "
+            f"[{engine}, {workers} worker(s)] ~= {n_points / rate:.1f}s"
+            f"{note}")
 
 
 def _opt_ints(s):
@@ -120,7 +148,22 @@ def calibrate_main(argv) -> int:
     ap.add_argument("--unrolls", type=_ints, default=(4, 8))
     ap.add_argument("--n-samples", type=int, default=32)
     ap.add_argument("--workers", type=int, default=None)
-    ap.add_argument("--engine", choices=ENGINES, default="event")
+    ap.add_argument("--engine", choices=SWEEP_ENGINES, default="batch",
+                    help="simulation core (default: the vectorized batch "
+                         "engine; event/cycle are the per-point steppers)")
+    ap.add_argument("--strategy", choices=STRATEGIES, default="exhaustive",
+                    help="search discipline: exhaustive evaluates every "
+                         "grid point; adaptive prunes via front-guided "
+                         "successive halving (the artifact provenance "
+                         "records strategy + fidelity ladder)")
+    ap.add_argument("--search-tolerance", type=float,
+                    default=DEFAULT_TOLERANCE,
+                    help="adaptive only: relative dominance slack a point "
+                         "may have to the running front and still advance "
+                         "to full fidelity")
+    ap.add_argument("--fidelity-ladder", type=_ints, default=DEFAULT_LADDER,
+                    help="adaptive only: comma list of n-samples divisors "
+                         "per rung, strictly decreasing, ending at 1")
     ap.add_argument("--objective", choices=OBJECTIVES, default="max-ipc")
     ap.add_argument("--energy-budget", type=float, default=None,
                     help="required for --objective energy-bounded-ipc")
@@ -143,11 +186,19 @@ def calibrate_main(argv) -> int:
         grid_kw["policies"] = [ExecutionPolicy.parse(p)
                                for p in args.policies.split(",")]
     out_dir = args.out_dir or calibration_dir()
+    n_est = len(grid(kernels=kernels, **grid_kw))
+    print(_estimated_cost_line(
+        n_est, args.engine, resolve_workers(n_est, args.workers),
+        args.strategy))
+    search_kw = (dict(tolerance=args.search_tolerance,
+                      fidelity_ladder=args.fidelity_ladder)
+                 if args.strategy == "adaptive" else None)
     t0 = time.time()
     recs = calibrate(kernels=kernels, objective=args.objective,
                      energy_budget=args.energy_budget,
                      tolerance=args.tolerance, grid_kw=grid_kw,
-                     workers=args.workers, out_dir=out_dir)
+                     workers=args.workers, out_dir=out_dir,
+                     strategy=args.strategy, search_kw=search_kw)
     dt = time.time() - t0
     for kernel in sorted(recs):
         r = recs[kernel]
@@ -155,7 +206,8 @@ def calibrate_main(argv) -> int:
         print(f"== {kernel}: {r.objective} -> {s['policy']} "
               f"depth={s['queue_depth']} lat={s['queue_latency']} "
               f"unroll={s['unroll']} (ipc={s['ipc']:.3f}, "
-              f"energy={s['energy']:.1f}; front {len(r.front)}) ==")
+              f"energy={s['energy']:.1f}; front {len(r.front)}; "
+              f"{len(r.selected_by_latency)} latency classes) ==")
         print(f"   {r.rationale}")
     print(f"\ncalibrated {len(recs)} kernels in {dt:.2f}s; wrote "
           f"{out_dir}/<kernel>.json (consumers honour REPRO_CALIBRATION_DIR)")
@@ -175,16 +227,16 @@ def main(argv=None) -> int:
                     help="comma list (default: all seven)")
     ap.add_argument("--policies", default=None,
                     help="comma list of baseline,copift,copiftv2 (default: all)")
-    ap.add_argument("--depths", type=_ints, default=(1, 2, 4, 8),
+    ap.add_argument("--depths", type=_ints, default=(1, 2, 4, 8, 16),
                     help="queue depths to sweep")
-    ap.add_argument("--latencies", type=_ints, default=(1, 2),
+    ap.add_argument("--latencies", type=_ints, default=(1, 2, 4, 8),
                     help="queue visibility latencies to sweep")
     ap.add_argument("--unrolls", type=_ints, default=(4, 8),
                     help="schedule interleave factors to sweep")
-    ap.add_argument("--depths-i2f", type=_opt_ints, default=(None,),
+    ap.add_argument("--depths-i2f", type=_opt_ints, default=(None, 2, 8),
                     help="asymmetric I2F depth overrides (comma list; "
                          "'-' = symmetric)")
-    ap.add_argument("--depths-f2i", type=_opt_ints, default=(None,),
+    ap.add_argument("--depths-f2i", type=_opt_ints, default=(None, 2, 8),
                     help="asymmetric F2I depth overrides (comma list; "
                          "'-' = symmetric)")
     ap.add_argument("--cores", type=_ints, default=(1,),
@@ -212,9 +264,25 @@ def main(argv=None) -> int:
     ap.add_argument("--n-samples", type=int, default=32)
     ap.add_argument("--workers", type=int, default=None,
                     help="process-pool width (0/1 = serial)")
-    ap.add_argument("--engine", choices=ENGINES, default="event",
-                    help="simulation core: event-driven time-skip (default) "
-                         "or the naive per-cycle reference")
+    ap.add_argument("--engine", choices=SWEEP_ENGINES, default="batch",
+                    help="simulation core: the vectorized batch engine "
+                         "(default; one numpy pass per lowered program, "
+                         "bit-identical to event), the per-point "
+                         "event-driven time-skip engine, or the naive "
+                         "per-cycle reference")
+    ap.add_argument("--strategy", choices=STRATEGIES, default="exhaustive",
+                    help="search discipline: exhaustive evaluates every "
+                         "point; adaptive (core.search) prunes points more "
+                         "than --search-tolerance beyond the running "
+                         "per-kernel Pareto fronts at coarse fidelity and "
+                         "only refines survivors at full fidelity")
+    ap.add_argument("--search-tolerance", type=float,
+                    default=DEFAULT_TOLERANCE,
+                    help="adaptive only: relative dominance slack kept "
+                         "alive while pruning")
+    ap.add_argument("--fidelity-ladder", type=_ints, default=DEFAULT_LADDER,
+                    help="adaptive only: comma list of n-samples divisors "
+                         "per rung, strictly decreasing, ending at 1")
     ap.add_argument("--out-dir", default=os.path.join("artifacts", "dse"))
     args = ap.parse_args(argv)
 
@@ -239,13 +307,25 @@ def main(argv=None) -> int:
           f"{len(args.depths)} depths x {len(args.latencies)} latencies x "
           f"{len(args.unrolls)} unrolls x {len(args.cores)} core-counts x "
           f"{len(args.banks)} bank-geometries; n_samples={args.n_samples}) "
-          f"[engine={args.engine}, workers={workers}] ...")
+          f"[engine={args.engine}, strategy={args.strategy}, "
+          f"workers={workers}] ...")
+    print(_estimated_cost_line(len(pts), args.engine, workers,
+                               args.strategy))
+    search_kw = (dict(tolerance=args.search_tolerance,
+                      fidelity_ladder=args.fidelity_ladder)
+                 if args.strategy == "adaptive" else {})
     t0 = time.time()
-    recs = run_sweep(pts, workers=args.workers)
+    recs, meta = run_search(pts, strategy=args.strategy,
+                            workers=args.workers, **search_kw)
     dt = time.time() - t0
     print(f"== timing ==\n  engine: {args.engine}\n  wall: {dt:.2f}s"
-          f"\n  points/sec: {len(recs) / dt:.1f}"
-          f"\n  ms/config: {dt / len(recs) * 1e3:.1f}\n")
+          f"\n  points/sec: {len(pts) / dt:.1f}"
+          f"\n  ms/config: {dt / len(pts) * 1e3:.1f}")
+    if args.strategy == "adaptive":
+        print(f"  adaptive: {meta['n_full_fidelity']}/{meta['n_points']} "
+              f"points reached full fidelity "
+              f"(rungs {meta['rungs']}, tolerance {meta['tolerance']:g})")
+    print()
 
     fronts = pareto_by_kernel(recs)
     for kernel, front in fronts.items():

@@ -3,6 +3,8 @@ cycle-approximate Snitch/FPSS machine model, a design-space exploration
 engine sweeping (kernel x policy x queue geometry x unroll) grids with
 Pareto-front extraction, plus the ExecutionPolicy enum that threads the
 dual-stream idea through the TPU layers of the framework."""
+from .batch_machine import (BatchDeadlock, BatchStepper, BatchUnsupported,
+                            batch_simulate, batch_supported)
 from .bench_kernels import KERNELS
 from .cluster import (ClusterConfig, ClusterResult, ClusterStepper,
                       simulate_cluster)
@@ -21,10 +23,12 @@ from .pareto import (dominates, format_front, pareto_by_kernel, pareto_front,
                      read_csv, write_csv)
 from .policy import (WORKLOAD_PROXIES, ExecutionPolicy, OperatingPoint,
                      PolicyTable, clear_policy_table_cache, default_table)
+from .search import (adaptive_sweep, eps_dominated, front_matches,
+                     run_search, scale_fidelity)
 from .sweep import (CSV_FIELDS, LEGACY_CSV_FIELDS, PRE_PIPELINE_CSV_FIELDS,
-                    SweepPoint, SweepRecord, clear_worker_caches, grid,
-                    partition_points, resolve_workers, run_point, run_sweep,
-                    sweep_summary)
+                    STRATEGIES, SWEEP_ENGINES, SweepPoint, SweepRecord,
+                    clear_worker_caches, grid, partition_points,
+                    resolve_workers, run_point, run_sweep, sweep_summary)
 from .transform import (TransformConfig, analyze, lower, partition_kernel,
                         partition_pipeline)
 
@@ -45,7 +49,11 @@ __all__ = [
     "TransformConfig", "analyze", "lower", "partition_kernel",
     "partition_pipeline",
     "CSV_FIELDS", "LEGACY_CSV_FIELDS", "PRE_PIPELINE_CSV_FIELDS",
-    "SweepPoint", "SweepRecord",
+    "STRATEGIES", "SWEEP_ENGINES", "SweepPoint", "SweepRecord",
     "clear_worker_caches", "grid", "partition_points", "resolve_workers",
     "run_point", "run_sweep", "sweep_summary",
+    "BatchDeadlock", "BatchStepper", "BatchUnsupported", "batch_simulate",
+    "batch_supported",
+    "adaptive_sweep", "eps_dominated", "front_matches", "run_search",
+    "scale_fidelity",
 ]

@@ -5,12 +5,17 @@ The DSE engine (``core.sweep`` + ``core.pareto``) finds the Pareto-optimal
 (IPC, energy) configurations per kernel; this module closes the loop the
 roadmap names ("feed Pareto fronts back into the TPU-layer policy choices"):
 
-1. :func:`calibrate` runs a sweep grid, reduces it to per-kernel fronts, and
+1. :func:`calibrate` runs a sweep grid (exhaustively, or pruned by the
+   front-guided adaptive search in ``core.search`` — the artifact provenance
+   records which), reduces it to per-kernel fronts, and
    :func:`select_operating_point` picks one front member under a declared
    objective — ``max-ipc``, ``min-energy`` or ``energy-bounded-ipc`` — with
    deterministic tie-breaking and an optional dominance tolerance (points
    within ``tolerance`` of the best primary axis count as ties, resolved on
-   the secondary axis: a 0.1% IPC win never buys a 2x energy cost).
+   the secondary axis: a 0.1% IPC win never buys a 2x energy cost).  Since
+   v4 the same objective is also re-applied per queue-latency class
+   (``selected_by_latency``), so consumers whose interconnect pins the
+   visibility latency read the best point *at that latency*.
 2. Each selection is persisted as ``artifacts/calibration/<kernel>.json`` —
    a schema-checked (:func:`validate_artifact`), versioned
    (:data:`SCHEMA_VERSION`) artifact embedding the swept grid, the full
@@ -36,9 +41,10 @@ import types
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from .pareto import dominates, pareto_by_kernel
+from .pareto import dominates, pareto_by_kernel, pareto_front
 from .policy import ExecutionPolicy, OperatingPoint
-from .sweep import SweepRecord, grid, run_sweep
+from .search import run_search
+from .sweep import SweepRecord, grid
 
 #: bump on any incompatible artifact-layout change; loaders treat a mismatch
 #: as *stale* and fall back to defaults rather than guessing at old layouts.
@@ -47,7 +53,11 @@ from .sweep import SweepRecord, grid, run_sweep
 #: back to defaults until recalibrated.
 #: v3: pipelined-cluster points (pipeline / cq_depth / dma_buffers) — v2
 #: artifacts are stale in turn.
-SCHEMA_VERSION = 3
+#: v4: per (kernel x queue-latency class) operating points
+#: (``selected_by_latency``) + search-strategy/fidelity provenance — v3
+#: artifacts load as stale (``PolicyTable`` warns and falls back to
+#: defaults) until recalibrated.
+SCHEMA_VERSION = 4
 
 OBJECTIVES = ("max-ipc", "min-energy", "energy-bounded-ipc")
 
@@ -60,7 +70,11 @@ POINT_FIELDS = (
 )
 
 ARTIFACT_FIELDS = ("schema_version", "kernel", "objective", "selected",
-                   "front", "grid", "provenance", "rationale")
+                   "selected_by_latency", "front", "grid", "provenance",
+                   "rationale")
+
+#: per latency-class entry layout inside ``selected_by_latency``
+LATENCY_CLASS_FIELDS = ("selected", "rationale")
 
 OBJECTIVE_FIELDS = ("name", "energy_budget", "tolerance")
 
@@ -87,10 +101,24 @@ def point_to_dict(rec: SweepRecord) -> Dict[str, Any]:
     return {f: getattr(rec, f) for f in POINT_FIELDS}
 
 
+def _op_from_point(s: Dict[str, Any]) -> OperatingPoint:
+    return OperatingPoint(
+        policy=ExecutionPolicy.parse(s["policy"]),
+        queue_depth=s["queue_depth"], queue_latency=s["queue_latency"],
+        unroll=s["unroll"], unroll_int=s["unroll_int"],
+        queue_depth_i2f=s["queue_depth_i2f"],
+        queue_depth_f2i=s["queue_depth_f2i"],
+        n_cores=s["n_cores"], tcdm_banks=s["tcdm_banks"],
+        pipeline=s["pipeline"], cq_depth=s["cq_depth"],
+        dma_buffers=s["dma_buffers"],
+        source="calibrated")
+
+
 @dataclass
 class CalibrationRecord:
     """One kernel's persisted calibration: the selected operating point, the
-    front it was chosen from, and everything needed to reproduce the choice."""
+    front it was chosen from, per queue-latency-class selections (v4), and
+    everything needed to reproduce the choice."""
     kernel: str
     objective: str
     selected: Dict[str, Any]
@@ -100,20 +128,28 @@ class CalibrationRecord:
     rationale: str
     energy_budget: Optional[float] = None
     tolerance: float = 0.0
+    #: v4: ``str(queue_latency) -> {"selected": point, "rationale": str}`` —
+    #: the objective re-applied to each latency class's own Pareto front, so
+    #: a consumer whose fabric pins the visibility latency gets the best
+    #: point *at that latency* instead of the global winner
+    selected_by_latency: Dict[str, Dict[str, Any]] = None  # type: ignore
     schema_version: int = SCHEMA_VERSION
 
+    def __post_init__(self):
+        if self.selected_by_latency is None:
+            self.selected_by_latency = {}
+
     def operating_point(self) -> OperatingPoint:
-        s = self.selected
-        return OperatingPoint(
-            policy=ExecutionPolicy.parse(s["policy"]),
-            queue_depth=s["queue_depth"], queue_latency=s["queue_latency"],
-            unroll=s["unroll"], unroll_int=s["unroll_int"],
-            queue_depth_i2f=s["queue_depth_i2f"],
-            queue_depth_f2i=s["queue_depth_f2i"],
-            n_cores=s["n_cores"], tcdm_banks=s["tcdm_banks"],
-            pipeline=s["pipeline"], cq_depth=s["cq_depth"],
-            dma_buffers=s["dma_buffers"],
-            source="calibrated")
+        return _op_from_point(self.selected)
+
+    def operating_point_for(self,
+                            queue_latency: int) -> OperatingPoint:
+        """The operating point for a pinned queue-latency class, falling
+        back to the global selection when the class was never swept."""
+        cls_ = self.selected_by_latency.get(str(queue_latency))
+        if cls_ is None:
+            return self.operating_point()
+        return _op_from_point(cls_["selected"])
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -123,6 +159,10 @@ class CalibrationRecord:
                           "energy_budget": self.energy_budget,
                           "tolerance": self.tolerance},
             "selected": dict(self.selected),
+            "selected_by_latency": {
+                lat: {"selected": dict(e["selected"]),
+                      "rationale": e["rationale"]}
+                for lat, e in self.selected_by_latency.items()},
             "front": [dict(p) for p in self.front],
             "grid": dict(self.grid),
             "provenance": dict(self.provenance),
@@ -136,6 +176,7 @@ class CalibrationRecord:
         return cls(kernel=d["kernel"], objective=obj["name"],
                    energy_budget=obj["energy_budget"],
                    tolerance=obj["tolerance"], selected=d["selected"],
+                   selected_by_latency=d["selected_by_latency"],
                    front=d["front"], grid=d["grid"],
                    provenance=d["provenance"], rationale=d["rationale"],
                    schema_version=d["schema_version"])
@@ -175,6 +216,23 @@ def validate_artifact(d: Dict[str, Any]) -> None:
         _check_exact_fields(p, POINT_FIELDS, f"front[{i}]")
     if d["selected"] not in d["front"]:
         raise CalibrationError("selected point is not a front member")
+    if not isinstance(d["selected_by_latency"], dict):
+        raise CalibrationError("selected_by_latency must be an object")
+    for lat, entry in d["selected_by_latency"].items():
+        where = f"selected_by_latency[{lat!r}]"
+        try:
+            lat_val = int(lat)
+        except (TypeError, ValueError):
+            raise CalibrationError(
+                f"{where}: key must be an integer queue latency") from None
+        _check_exact_fields(entry, LATENCY_CLASS_FIELDS, where)
+        _check_exact_fields(entry["selected"], POINT_FIELDS,
+                            f"{where}.selected")
+        ExecutionPolicy.parse(entry["selected"]["policy"])
+        if entry["selected"]["queue_latency"] != lat_val:
+            raise CalibrationError(
+                f"{where}: selected point has queue_latency "
+                f"{entry['selected']['queue_latency']} != class {lat_val}")
 
 
 # -- objective-aware selection ----------------------------------------------
@@ -309,6 +367,29 @@ DEFAULT_GRID = dict(queue_depths=(1, 2, 4, 8), queue_latencies=(1, 2),
                     unrolls=(4, 8), n_samples=32)
 
 
+def _select_by_latency(records: List[SweepRecord], objective: str,
+                       energy_budget: Optional[float], tolerance: float
+                       ) -> Dict[str, Dict[str, Any]]:
+    """The v4 per-class selections: re-apply the objective to each queue-
+    latency class's own Pareto front (a class whose front is empty — every
+    point rejected — is simply absent)."""
+    classes: Dict[int, List[SweepRecord]] = {}
+    for r in records:
+        if r.ok:
+            classes.setdefault(r.queue_latency, []).append(r)
+    out: Dict[str, Dict[str, Any]] = {}
+    for lat in sorted(classes):
+        front = pareto_front(classes[lat])
+        if not front:
+            continue
+        pick, rationale = select_operating_point(
+            front, objective, energy_budget=energy_budget,
+            tolerance=tolerance)
+        out[str(lat)] = {"selected": point_to_dict(pick),
+                         "rationale": f"latency class {lat}: {rationale}"}
+    return out
+
+
 def calibrate(kernels: Optional[Sequence[str]] = None,
               objective: str = "max-ipc",
               energy_budget: Optional[float] = None,
@@ -316,7 +397,10 @@ def calibrate(kernels: Optional[Sequence[str]] = None,
               grid_kw: Optional[Dict[str, Any]] = None,
               workers: Optional[int] = None,
               out_dir: Optional[str] = None,
-              write: bool = True) -> Dict[str, CalibrationRecord]:
+              write: bool = True,
+              strategy: str = "exhaustive",
+              search_kw: Optional[Dict[str, Any]] = None
+              ) -> Dict[str, CalibrationRecord]:
     """Sweep → per-kernel fronts → objective selection → artifacts.
 
     Returns kernel → :class:`CalibrationRecord`; with ``write=True`` (the
@@ -324,11 +408,22 @@ def calibrate(kernels: Optional[Sequence[str]] = None,
     :func:`calibration_dir`).  Raises if any swept point deadlocks or
     diverges from the baseline interpreter — a calibration produced by a
     broken simulation must never be written.
+
+    ``strategy`` selects the search discipline (``core.search``):
+    ``"adaptive"`` prunes the grid by front-guided successive halving
+    (``search_kw`` passes ``tolerance`` / ``fidelity_ladder`` through) and
+    the artifact's provenance embeds the full search meta — strategy,
+    fidelity ladder, per-rung survivor counts — so a consumer can tell a
+    pruned calibration from an exhaustive one.  Besides the global
+    selection, each artifact carries per queue-latency-class selections
+    (``selected_by_latency``, v4): the objective re-applied to each latency
+    class's own front.
     """
     gk = dict(DEFAULT_GRID)
     gk.update(grid_kw or {})
     points = grid(kernels=kernels, **gk)
-    records = run_sweep(points, workers=workers)
+    records, search_meta = run_search(points, strategy=strategy,
+                                      workers=workers, **(search_kw or {}))
     bad = [r for r in records if r.status == "deadlock"
            or (r.ok and (not r.equivalent or r.fifo_violations))]
     if bad:
@@ -349,7 +444,11 @@ def calibrate(kernels: Optional[Sequence[str]] = None,
         "engine": points[0].engine if points else "event",
         "n_points": len(points),
         "n_ok": sum(r.ok for r in records),
+        "search": search_meta,
     }
+    by_kernel: Dict[str, List[SweepRecord]] = {}
+    for r in records:
+        by_kernel.setdefault(r.kernel, []).append(r)
     out: Dict[str, CalibrationRecord] = {}
     for kernel, front in pareto_by_kernel(records).items():
         pick, rationale = select_operating_point(
@@ -358,6 +457,9 @@ def calibrate(kernels: Optional[Sequence[str]] = None,
         rec = CalibrationRecord(
             kernel=kernel, objective=objective, energy_budget=energy_budget,
             tolerance=tolerance, selected=point_to_dict(pick),
+            selected_by_latency=_select_by_latency(
+                by_kernel.get(kernel, []), objective, energy_budget,
+                tolerance),
             front=[point_to_dict(r) for r in front], grid=grid_desc,
             provenance=provenance, rationale=rationale)
         validate_artifact(rec.to_dict())     # never persist a bad artifact

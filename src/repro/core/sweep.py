@@ -26,6 +26,23 @@ and :func:`partition_points` hands each pool worker a contiguous, presized
 run of points sorted by lowering key so those memos actually hit.  Workers
 are sized by ``min(cpu, len(points))`` and can be pinned with the
 ``REPRO_SWEEP_WORKERS`` environment variable (CI sets it to 1).
+
+Engines: every point carries an ``engine`` field.  ``"cycle"`` and
+``"event"`` are the per-point steppers from ``core.machine``;
+``engine="batch"`` (PR 7) routes non-clustered points through
+``core.batch_machine.BatchStepper``, which advances *all points sharing a
+lowered program* in one vectorized pass — each worker groups its partition
+by program identity (:func:`_batch_records`), so the whole
+``queue_depth x queue_latency x i2f x f2i`` machine axis of a
+depth-insensitive policy collapses into a single numpy evaluation.  The
+batch engine is bit-identical to the event engine (enforced by
+``tests/test_batch_machine.py``); points it cannot express fall back to the
+event stepper per point, and clustered points always use the event engine.
+
+Strategies: :func:`run_sweep` evaluates every point exhaustively by
+default; ``strategy="adaptive"`` dispatches to
+``core.search.adaptive_sweep`` (front-guided successive halving), which
+returns records only for points that survive to full fidelity.
 """
 from __future__ import annotations
 
@@ -35,6 +52,7 @@ import os
 from dataclasses import asdict, dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .batch_machine import BatchDeadlock, BatchStepper, BatchUnsupported
 from .bench_kernels import KERNELS
 from .cluster import ClusterConfig, ClusterStepper
 from .isa import Queue
@@ -43,6 +61,13 @@ from .metrics import best, geomean, group_by
 from .policy import ExecutionPolicy
 from .transform import (TransformConfig, lower, partition_kernel,
                         partition_pipeline)
+
+#: engines accepted by sweep points: the per-point steppers from
+#: ``core.machine`` plus the vectorized batch engine (``core.batch_machine``)
+SWEEP_ENGINES: Tuple[str, ...] = tuple(ENGINES) + ("batch",)
+
+#: search strategies accepted by :func:`run_sweep`
+STRATEGIES: Tuple[str, ...] = ("exhaustive", "adaptive")
 
 
 @dataclass(frozen=True)
@@ -56,7 +81,7 @@ class SweepPoint:
     unroll: int = 8
     unroll_int: Optional[int] = None
     n_samples: int = 64
-    engine: str = "event"            # machine.ENGINES: "event" | "cycle"
+    engine: str = "event"            # SWEEP_ENGINES: "event"|"cycle"|"batch"
     #: asymmetric FIFO geometry: per-queue depth overrides (None => the
     #: symmetric ``queue_depth``).  The lowering targets the tighter queue
     #: (min effective depth), which keeps the no-deadlock schedule guarantee
@@ -197,8 +222,9 @@ def grid(kernels: Optional[Sequence[str]] = None,
     unknown = [k for k in ks if k not in KERNELS]
     if unknown:
         raise KeyError(f"unknown kernels: {unknown} (have {sorted(KERNELS)})")
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r} (have {ENGINES})")
+    if engine not in SWEEP_ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r} (have {SWEEP_ENGINES})")
     if any(nc < 1 for nc in n_cores):
         raise ValueError(f"n_cores axis must be positive: {tuple(n_cores)}")
     if any(nb is not None and nb < 1 for nb in tcdm_banks):
@@ -298,36 +324,19 @@ def clear_worker_caches() -> None:
     transform._PARTITION_CACHE.clear()
 
 
-def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
-    """Lower + simulate one configuration and check baseline equivalence.
-
-    Never raises for model-level outcomes: infeasible schedules come back as
-    ``status="rejected"`` and runtime deadlocks as ``status="deadlock"`` so a
-    sweep always yields one record per point.  ``use_caches=False`` bypasses
-    the per-worker memos (the pre-caching pipeline, kept for benchmarking).
-    """
-    dfg = KERNELS[pt.kernel]
-    policy = ExecutionPolicy.parse(pt.policy)
+def _geometry_detail(pt: SweepPoint) -> Optional[str]:
+    """A rejection message for malformed cluster geometry, else None."""
     if (pt.n_cores < 1 or (pt.tcdm_banks is not None and pt.tcdm_banks < 1)
             or pt.cq_depth < 1 or pt.dma_buffers < 1):
-        # a malformed cluster geometry must yield one rejected record, not a
-        # raw traceback killing a pool worker (and an n_cores=0 point must
-        # never masquerade as a cheap single-PE run in a calibration sweep)
-        return SweepRecord(
-            kernel=pt.kernel, policy=policy.value,
-            queue_depth=pt.queue_depth, queue_latency=pt.queue_latency,
-            unroll=pt.unroll, unroll_int=pt.unroll_int,
-            n_samples=pt.n_samples, engine=pt.engine,
-            queue_depth_i2f=pt.queue_depth_i2f,
-            queue_depth_f2i=pt.queue_depth_f2i,
-            n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
-            pipeline=pt.pipeline, cq_depth=pt.cq_depth,
-            dma_buffers=pt.dma_buffers,
-            status="rejected",
-            detail=f"invalid cluster geometry: n_cores={pt.n_cores}, "
-                   f"tcdm_banks={pt.tcdm_banks}, cq_depth={pt.cq_depth}, "
-                   f"dma_buffers={pt.dma_buffers}")
-    base = dict(kernel=pt.kernel, policy=policy.value,
+        return (f"invalid cluster geometry: n_cores={pt.n_cores}, "
+                f"tcdm_banks={pt.tcdm_banks}, cq_depth={pt.cq_depth}, "
+                f"dma_buffers={pt.dma_buffers}")
+    return None
+
+
+def _point_base(pt: SweepPoint, policy: ExecutionPolicy) -> Dict:
+    """The identity columns every record for ``pt`` shares."""
+    return dict(kernel=pt.kernel, policy=policy.value,
                 queue_depth=pt.queue_depth, queue_latency=pt.queue_latency,
                 unroll=pt.unroll, unroll_int=pt.unroll_int,
                 n_samples=pt.n_samples, engine=pt.engine,
@@ -336,19 +345,75 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
                 n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
                 pipeline=pt.pipeline, cq_depth=pt.cq_depth,
                 dma_buffers=pt.dma_buffers)
+
+
+def _lower_tcfg(pt: SweepPoint, policy: ExecutionPolicy) -> TransformConfig:
+    """The lowering config for ``pt``, normalized so the per-worker memo key
+    collapses axes the transform ignores (depth for queue-free policies)."""
     tcfg = _tcfg_for(pt)
     if policy not in TransformConfig.DEPTH_SENSITIVE_POLICIES:
         # depth is not transform-relevant here: normalize it out of the memo
         # key so one lowering serves the whole depth axis
         tcfg = TransformConfig(unroll=tcfg.unroll, unroll_int=tcfg.unroll_int,
                                batch=tcfg.batch, n_samples=tcfg.n_samples)
+    return tcfg
+
+
+def _mcfg_for(pt: SweepPoint) -> MachineConfig:
     d_i2f, d_f2i = pt.effective_depths()
-    mcfg = MachineConfig(queue_depth=pt.queue_depth,
+    return MachineConfig(queue_depth=pt.queue_depth,
                          queue_latency=pt.queue_latency,
                          queue_depths=({Queue.I2F: d_i2f, Queue.F2I: d_f2i}
                                        if (pt.queue_depth_i2f is not None or
                                            pt.queue_depth_f2i is not None)
                                        else None))
+
+
+def _check_equivalent(dfg, env: Dict, n_samples: int, ref: Dict) -> bool:
+    """Outputs in ``env`` bit-identical to the interpreter oracle ``ref``?"""
+    return all(
+        [env.get(f"{node.name}@{i}") for i in range(n_samples)]
+        == ref[node.name]
+        for node in dfg.outputs())
+
+
+def _ok_record(base: Dict, res, equivalent: bool) -> SweepRecord:
+    """Flatten a single-PE :class:`SimResult` into an ok record."""
+    s = res.summary()
+    return SweepRecord(
+        **base, status="ok", cycles=s["cycles"], ipc=s["ipc"],
+        energy=s["energy"], power=s["power"], throughput=s["throughput"],
+        efficiency=s["efficiency"], instrs_int=s["instrs_int"],
+        instrs_fp=s["instrs_fp"], max_occ_i2f=s["max_occ_i2f"],
+        max_occ_f2i=s["max_occ_f2i"], fifo_violations=s["fifo_violations"],
+        equivalent=equivalent, ipc_per_core=s["ipc"], stalls=s["stalls"])
+
+
+def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
+    """Lower + simulate one configuration and check baseline equivalence.
+
+    Never raises for model-level outcomes: infeasible schedules come back as
+    ``status="rejected"`` and runtime deadlocks as ``status="deadlock"`` so a
+    sweep always yields one record per point.  ``use_caches=False`` bypasses
+    the per-worker memos (the pre-caching pipeline, kept for benchmarking).
+
+    ``engine="batch"`` on a single point runs a width-1 batch (the grouped
+    fast path lives in :func:`_batch_records`, reached via
+    :func:`run_sweep`); batch-inexpressible programs fall back to the event
+    stepper, and clustered points always simulate on the event engine.
+    """
+    dfg = KERNELS[pt.kernel]
+    policy = ExecutionPolicy.parse(pt.policy)
+    detail = _geometry_detail(pt)
+    if detail is not None:
+        # a malformed cluster geometry must yield one rejected record, not a
+        # raw traceback killing a pool worker (and an n_cores=0 point must
+        # never masquerade as a cheap single-PE run in a calibration sweep)
+        return SweepRecord(**_point_base(pt, policy), status="rejected",
+                           detail=detail)
+    base = _point_base(pt, policy)
+    tcfg = _lower_tcfg(pt, policy)
+    mcfg = _mcfg_for(pt)
     if pt.clustered:
         return _run_cluster_point(pt, dfg, policy, base, tcfg, mcfg,
                                   use_caches)
@@ -359,24 +424,26 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
             prog = lower(dfg, policy, tcfg, use_prefix_cache=False)
     except ValueError as e:
         return SweepRecord(**base, status="rejected", detail=str(e))
-    try:
-        res = stepper_for(prog, mcfg, pt.engine).run()
-    except DeadlockError as e:
-        return SweepRecord(**base, status="deadlock", detail=str(e))
+    if pt.engine == "batch":
+        try:
+            out = BatchStepper(prog, [mcfg]).run()[0]
+        except BatchUnsupported:
+            out = None               # inexpressible: event-stepper fallback
+        if isinstance(out, BatchDeadlock):
+            return SweepRecord(**base, status="deadlock", detail=out.message)
+        res = out
+    else:
+        res = None
+    if res is None:
+        try:
+            sim_engine = "event" if pt.engine == "batch" else pt.engine
+            res = stepper_for(prog, mcfg, sim_engine).run()
+        except DeadlockError as e:
+            return SweepRecord(**base, status="deadlock", detail=str(e))
     ref = (_reference_cached(pt.kernel, pt.n_samples) if use_caches
            else dfg.eval_reference(pt.n_samples))
-    equivalent = all(
-        [res.env.get(f"{node.name}@{i}") for i in range(pt.n_samples)]
-        == ref[node.name]
-        for node in dfg.outputs())
-    s = res.summary()
-    return SweepRecord(
-        **base, status="ok", cycles=s["cycles"], ipc=s["ipc"],
-        energy=s["energy"], power=s["power"], throughput=s["throughput"],
-        efficiency=s["efficiency"], instrs_int=s["instrs_int"],
-        instrs_fp=s["instrs_fp"], max_occ_i2f=s["max_occ_i2f"],
-        max_occ_f2i=s["max_occ_f2i"], fifo_violations=s["fifo_violations"],
-        equivalent=equivalent, ipc_per_core=s["ipc"], stalls=s["stalls"])
+    equivalent = _check_equivalent(dfg, res.env, pt.n_samples, ref)
+    return _ok_record(base, res, equivalent)
 
 
 def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
@@ -416,7 +483,10 @@ def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
                          machine=mcfg, cq_depth=pt.cq_depth,
                          dma_buffers=pt.dma_buffers)
     try:
-        res = ClusterStepper(progs, ccfg, engine=pt.engine).run()
+        # the batch engine is single-PE only: clustered points simulate on
+        # the event engine (the record still carries engine="batch")
+        sim_engine = "event" if pt.engine == "batch" else pt.engine
+        res = ClusterStepper(progs, ccfg, engine=sim_engine).run()
     except DeadlockError as e:
         return SweepRecord(**base, status="deadlock", detail=str(e))
     ref = (_reference_cached(pt.kernel, pt.n_samples) if use_caches
@@ -472,11 +542,79 @@ def partition_points(points: Sequence[SweepPoint],
     return parts
 
 
+def _batch_eligible(pt: SweepPoint) -> bool:
+    """Points the grouped batch path handles: batch-engine, single-PE, and
+    well-formed geometry (everything else goes through :func:`run_point`)."""
+    return (pt.engine == "batch" and not pt.clustered
+            and _geometry_detail(pt) is None)
+
+
+def _batch_records(pairs: List[Tuple[int, SweepPoint]]
+                   ) -> List[Tuple[int, SweepRecord]]:
+    """The grouped fast path for batch-eligible points.
+
+    Lowers every point through the per-worker memo, groups by *lowered
+    program identity* — ``id(prog)`` merges the whole machine axis of a
+    depth-insensitive policy (and depth-saturated COPIFTv2 classes that
+    reuse a Program) into one group — and advances each group through a
+    single :class:`~.batch_machine.BatchStepper` pass.  Per group, the
+    equivalence oracle is checked once per distinct result env (lockstep
+    points share one env object; only scalar-delegated outliers re-check).
+    Groups the batch engine cannot express fall back to per-point event
+    simulation via :func:`run_point`; deadlocked points become
+    ``status="deadlock"`` records exactly like the scalar path."""
+    out: List[Tuple[int, SweepRecord]] = []
+    groups: Dict[int, List[Tuple[int, SweepPoint, MachineConfig]]] = {}
+    progs: Dict[int, object] = {}
+    for i, pt in pairs:
+        policy = ExecutionPolicy.parse(pt.policy)
+        try:
+            prog = _lower_cached(pt.kernel, policy.value,
+                                 _lower_tcfg(pt, policy))
+        except ValueError as e:
+            out.append((i, SweepRecord(**_point_base(pt, policy),
+                                       status="rejected", detail=str(e))))
+            continue
+        gid = id(prog)
+        progs[gid] = prog
+        groups.setdefault(gid, []).append((i, pt, _mcfg_for(pt)))
+    for gid, items in groups.items():
+        prog = progs[gid]
+        try:
+            results = BatchStepper(prog, [m for _, _, m in items]).run()
+        except BatchUnsupported:
+            out.extend((i, run_point(pt)) for i, pt, _ in items)
+            continue
+        equiv_by_env: Dict[int, bool] = {}
+        for (i, pt, _mcfg), res in zip(items, results):
+            policy = ExecutionPolicy.parse(pt.policy)
+            base = _point_base(pt, policy)
+            if isinstance(res, BatchDeadlock):
+                out.append((i, SweepRecord(**base, status="deadlock",
+                                           detail=res.message)))
+                continue
+            eq = equiv_by_env.get(id(res.env))
+            if eq is None:
+                eq = _check_equivalent(
+                    KERNELS[pt.kernel], res.env, pt.n_samples,
+                    _reference_cached(pt.kernel, pt.n_samples))
+                equiv_by_env[id(res.env)] = eq
+            out.append((i, _ok_record(base, res, eq)))
+    return out
+
+
 def _run_indexed(pairs: List[Tuple[int, SweepPoint]]
                  ) -> List[Tuple[int, SweepRecord]]:
     """Pool-worker entry: run a batch in partition order, tagging each record
-    with its input index so the caller can restore input order."""
-    return [(i, run_point(pt)) for i, pt in pairs]
+    with its input index so the caller can restore input order.  Batch-
+    eligible points peel off into the grouped fast path; the rest run one
+    at a time."""
+    batched = [(i, pt) for i, pt in pairs if _batch_eligible(pt)]
+    rest = [(i, pt) for i, pt in pairs if not _batch_eligible(pt)]
+    out = [(i, run_point(pt)) for i, pt in rest]
+    if batched:
+        out.extend(_batch_records(batched))
+    return out
 
 
 def resolve_workers(n_points: int, workers: Optional[int] = None) -> int:
@@ -493,12 +631,31 @@ def resolve_workers(n_points: int, workers: Optional[int] = None) -> int:
 
 
 def run_sweep(points: Sequence[SweepPoint],
-              workers: Optional[int] = None) -> List[SweepRecord]:
-    """Run every point, returning records in input order.  ``workers=None``
+              workers: Optional[int] = None,
+              strategy: str = "exhaustive",
+              **search_kw) -> List[SweepRecord]:
+    """Run a sweep, returning records in input order.  ``workers=None``
     auto-sizes a process pool (see :func:`resolve_workers`); ``workers<=1``
     forces in-process execution.  Pool startup failures (restricted
     sandboxes) degrade to serial.  Points are fanned out with
-    :func:`partition_points`, so each worker sees a cache-friendly run."""
+    :func:`partition_points` — one partition per worker, so batch grouping
+    happens inside each worker and never double-partitions.
+
+    ``strategy`` selects the search discipline (:data:`STRATEGIES`):
+    ``"exhaustive"`` evaluates every point; ``"adaptive"`` dispatches to
+    ``core.search.adaptive_sweep`` (front-guided successive halving) and
+    returns *only* the full-fidelity survivor records — extra keyword
+    arguments (``tolerance``, ``fidelity_ladder``, ...) pass through."""
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown strategy {strategy!r} (have {STRATEGIES})")
+    if strategy == "adaptive":
+        from .search import adaptive_sweep   # local: search imports sweep
+        records, _meta = adaptive_sweep(points, workers=workers, **search_kw)
+        return records
+    if search_kw:
+        raise TypeError(
+            f"unexpected arguments for exhaustive sweep: {sorted(search_kw)}")
     points = list(points)
     workers = resolve_workers(len(points), workers)
     if workers > 1 and len(points) > 1:
@@ -517,7 +674,10 @@ def run_sweep(points: Sequence[SweepPoint],
                 return list(out)     # type: ignore[arg-type]
         except (ImportError, OSError, PermissionError, BrokenProcessPool):
             pass                     # no usable pool: run in-process below
-    return [run_point(pt) for pt in points]
+    serial: List[Optional[SweepRecord]] = [None] * len(points)
+    for i, rec in _run_indexed(list(enumerate(points))):
+        serial[i] = rec
+    return list(serial)              # type: ignore[arg-type]
 
 
 def sweep_summary(records: Iterable[SweepRecord]) -> Dict[str, float]:

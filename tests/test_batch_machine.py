@@ -1,0 +1,220 @@
+"""Differential tests for the vectorized batch engine (PR 7).
+
+The contract under test extends PR 2's: :class:`repro.core.BatchStepper`
+(one numpy max-recurrence pass over B machine configs of the same lowered
+program) is **bit-identical** to :class:`Stepper` (the event engine, itself
+bit-identical to the per-cycle reference) on every point of a fuzzed
+multi-axis grid — cycles, energy, stall breakdown, FIFO push/pop sequences,
+occupancy highwater, FIFO-discipline violations, the functional
+environment, and deadlock behavior (same message at the same cycle with the
+same stall state, surfaced as :class:`BatchDeadlock` instead of an
+exception so one bad point cannot take down a batch).
+
+Randomized configurations are drawn with ``hypothesis`` when available
+(via tests/_hypothesis_compat.py) and with a seeded stdlib PRNG otherwise,
+so the differential property always runs.
+"""
+import dataclasses
+import itertools
+import os
+import random
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core import (KERNELS, BatchDeadlock, BatchStepper,
+                        BatchUnsupported, DeadlockError, MachineConfig,
+                        Program, Stepper, SweepPoint, TransformConfig,
+                        batch_simulate, batch_supported, grid, lower,
+                        run_point, run_sweep)
+from repro.core.isa import Instr, OpKind, Queue, Unit
+from repro.core.policy import ExecutionPolicy as P
+
+#: every SimResult facet the engines must agree on (the PR-2 set)
+FACETS = ("cycles", "energy", "instrs", "stalls", "push_seq", "pop_seq",
+          "max_queue_occupancy", "fifo_violations", "env")
+
+
+def _assert_batch_matches_scalar(prog, cfgs):
+    """One batched run vs B scalar event-engine runs, all facets."""
+    outs = BatchStepper(prog, cfgs).run()
+    assert len(outs) == len(cfgs)
+    for cfg, got in zip(cfgs, outs):
+        scalar = Stepper(prog, cfg)
+        try:
+            ref = scalar.run()
+        except DeadlockError as e:
+            assert isinstance(got, BatchDeadlock), \
+                f"scalar deadlocked, batch completed ({cfg})"
+            assert (got.message, got.cycle, got.stalls) == \
+                (str(e), scalar.cycle, dict(scalar.stalls))
+            assert isinstance(got.error(), DeadlockError)
+            continue
+        assert not isinstance(got, BatchDeadlock), \
+            f"batch deadlocked, scalar completed ({cfg}): {got.message}"
+        for facet in FACETS:
+            assert getattr(ref, facet) == getattr(got, facet), (facet, cfg)
+
+
+def _config_axis(rng=None):
+    """A multi-axis spread of machine configs: symmetric and asymmetric
+    depths, latency stretches, and tight deadlock limits."""
+    cfgs = []
+    for d, lat in itertools.product((1, 2, 4, 8), (1, 3, 8)):
+        cfgs.append(MachineConfig(queue_depth=d, queue_latency=lat))
+    for di, df in ((1, 8), (8, 1), (2, 16), (16, 2)):
+        cfgs.append(MachineConfig(
+            queue_depth=4, queue_latency=2,
+            queue_depths={Queue.I2F: di, Queue.F2I: df}))
+    for lim in (1, 3, 50):
+        cfgs.append(MachineConfig(queue_depth=1, queue_latency=8,
+                                  deadlock_limit=lim))
+    if rng is not None:
+        rng.shuffle(cfgs)
+    return cfgs
+
+
+# ---------------------------------------------------------------------------
+# Dense small grid (tier1) + randomized fuzz
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("policy", list(P), ids=[p.value for p in P])
+def test_batch_engine_matches_stepper_small_grid(policy):
+    for kernel in ("expf", "box_muller", "histf"):
+        tcfg = TransformConfig(n_samples=8, queue_depth=4, unroll=4)
+        try:
+            prog = lower(KERNELS[kernel], policy, tcfg)
+        except ValueError:
+            continue                  # infeasible schedule: nothing to diff
+        _assert_batch_matches_scalar(prog, _config_axis())
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_batch_engine_matches_stepper_random_configs(seed):
+    """Seeded-PRNG differential fuzz across the whole configuration space."""
+    rng = random.Random(seed)
+    for _ in range(6):
+        kernel = rng.choice(sorted(KERNELS))
+        policy = rng.choice(list(P))
+        tcfg = TransformConfig(n_samples=rng.choice((8, 16)),
+                               queue_depth=rng.choice((1, 2, 4, 8)),
+                               unroll=rng.choice((2, 4, 8)))
+        try:
+            prog = lower(KERNELS[kernel], policy, tcfg)
+        except ValueError:
+            continue
+        _assert_batch_matches_scalar(prog, _config_axis(rng)[:10])
+
+
+@given(st.sampled_from(sorted(KERNELS)), st.sampled_from(list(P)),
+       st.integers(min_value=1, max_value=8),
+       st.sampled_from((2, 4, 8)),
+       st.sampled_from((8, 16)))
+@settings(max_examples=10, deadline=None)
+def test_batch_engine_matches_stepper_hypothesis(kernel, policy, depth,
+                                                 unroll, n):
+    """Property form of the differential check (skips without hypothesis)."""
+    tcfg = TransformConfig(n_samples=n, queue_depth=depth, unroll=unroll)
+    try:
+        prog = lower(KERNELS[kernel], policy, tcfg)
+    except ValueError:
+        return
+    _assert_batch_matches_scalar(prog, _config_axis()[:8])
+
+
+# ---------------------------------------------------------------------------
+# Deadlock parity + API edges
+# ---------------------------------------------------------------------------
+
+def _circular_wait_program():
+    """INT pops F2I before pushing I2F; FP pops I2F before pushing F2I."""
+    ins_i = Instr(uid=0, kind=OpKind.MV, label="i0", srcs=(Queue.F2I,),
+                  dst="a", pushes=(Queue.I2F,), push_val="a")
+    ins_f = Instr(uid=1, kind=OpKind.FADD, label="f0", srcs=(Queue.I2F,),
+                  dst="b", pushes=(Queue.F2I,), push_val="b")
+    return Program(name="dead", policy=P.COPIFTV2, mode="dual",
+                   streams={Unit.INT: [ins_i], Unit.FP: [ins_f]}, n_samples=1)
+
+
+@pytest.mark.tier1
+def test_batch_deadlock_parity_same_cycle_same_message_same_stalls():
+    """A guaranteed deadlock comes back as a BatchDeadlock carrying exactly
+    the scalar engine's terminal state, for every point in the batch."""
+    prog = _circular_wait_program()
+    cfgs = [MachineConfig(evaluate=False, deadlock_limit=lim)
+            for lim in (10, 300)]
+    _assert_batch_matches_scalar(prog, cfgs)
+
+
+@pytest.mark.tier1
+def test_batch_empty_batch_and_empty_program():
+    prog = lower(KERNELS["histf"], P.BASELINE, TransformConfig(n_samples=8))
+    assert BatchStepper(prog, []).run() == []
+    empty = Program(name="empty", policy=P.BASELINE, mode="single",
+                    streams={Unit.INT: []}, n_samples=0)
+    for res in BatchStepper(empty, [MachineConfig(), MachineConfig()]).run():
+        assert res.cycles == 0 and res.ipc == 0.0
+
+
+@pytest.mark.tier1
+def test_batch_rejects_mixed_evaluate_modes():
+    prog = lower(KERNELS["histf"], P.BASELINE, TransformConfig(n_samples=8))
+    with pytest.raises(BatchUnsupported):
+        BatchStepper(prog, [MachineConfig(evaluate=True),
+                            MachineConfig(evaluate=False)])
+
+
+@pytest.mark.tier1
+def test_batch_simulate_and_supported_api():
+    prog = lower(KERNELS["expf"], P.COPIFTV2, TransformConfig(n_samples=8))
+    assert batch_supported(prog) is None   # None == no unsupported reason
+    cfgs = [MachineConfig(queue_depth=d) for d in (4, 8)]
+    outs = batch_simulate(prog, cfgs)
+    for cfg, got in zip(cfgs, outs):
+        ref = Stepper(prog, cfg).run()
+        assert (ref.cycles, ref.energy) == (got.cycles, got.energy)
+
+
+# ---------------------------------------------------------------------------
+# Sweep integration: engine="batch" through run_point / run_sweep
+# ---------------------------------------------------------------------------
+
+def _strip_engine(rec):
+    d = dataclasses.asdict(rec)
+    d.pop("engine")
+    return d
+
+
+@pytest.mark.tier1
+def test_sweep_batch_engine_matches_event_engine_records():
+    """The wired sweep path: identical records (minus the engine column) for
+    engine="batch" vs engine="event", including asymmetric geometries and a
+    clustered point (which falls back to the event engine)."""
+    pts_e = grid(kernels=("expf", "histf"),
+                 policies=(P.COPIFT, P.COPIFTV2),
+                 queue_depths=(1, 4), queue_latencies=(1, 8),
+                 i2f_depths=(None, 2), n_samples=16)
+    pts_e += [SweepPoint(kernel="expf", policy="copiftv2", n_samples=16,
+                         n_cores=2)]
+    pts_b = [dataclasses.replace(p, engine="batch") for p in pts_e]
+    recs_e = run_sweep(pts_e, workers=1)
+    recs_b = run_sweep(pts_b, workers=1)
+    for a, b in zip(recs_e, recs_b):
+        assert b.engine == "batch"
+        assert _strip_engine(a) == _strip_engine(b)
+
+
+@pytest.mark.tier1
+def test_run_point_batch_single_point_and_unknown_engine():
+    pt = SweepPoint(kernel="expf", policy="copiftv2", n_samples=16,
+                    engine="batch")
+    rec = run_point(pt)
+    assert rec.ok and rec.engine == "batch" and rec.equivalent
+    ref = run_point(dataclasses.replace(pt, engine="event"))
+    assert _strip_engine(rec) == _strip_engine(ref)
+    with pytest.raises(ValueError):
+        grid(kernels=("expf",), engine="warp")

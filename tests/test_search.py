@@ -1,0 +1,137 @@
+"""Front-guided adaptive search tests (PR 7, ``core.search``).
+
+The exhaustive sweep is the differential oracle: on a small grid,
+``adaptive_sweep`` must return exact full-fidelity records (a subsequence
+of the exhaustive run, in input order) whose per-kernel Pareto fronts
+cover the exhaustive fronts within the dominance tolerance.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (SweepPoint, SweepRecord, adaptive_sweep,
+                        eps_dominated, front_matches, grid, pareto_by_kernel,
+                        run_search, run_sweep, scale_fidelity)
+from repro.core.policy import ExecutionPolicy as P
+
+
+def _small_grid(engine="batch"):
+    return grid(kernels=("expf", "histf"), policies=(P.COPIFT, P.COPIFTV2),
+                queue_depths=(1, 2, 4, 8), queue_latencies=(2, 8),
+                i2f_depths=(None, 2), n_samples=64, engine=engine)
+
+
+def _rec(ipc, energy, kernel="k"):
+    """A minimal ok record at an (ipc, energy) coordinate."""
+    return SweepRecord(kernel=kernel, policy="copiftv2", queue_depth=4,
+                       queue_latency=1, unroll=8, unroll_int=None,
+                       n_samples=64, status="ok", ipc=ipc, energy=energy)
+
+
+# ---------------------------------------------------------------------------
+# Dominance-tolerance primitives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_eps_dominated_semantics():
+    front = [_rec(2.0, 100.0)]
+    assert eps_dominated(_rec(1.0, 200.0), front, tolerance=0.0)
+    # within 10% of the front on both axes: survives at tolerance=0.1
+    assert not eps_dominated(_rec(1.85, 108.0), front, tolerance=0.1)
+    assert eps_dominated(_rec(1.5, 150.0), front, tolerance=0.1)
+    # front members never eps-dominate themselves
+    assert not eps_dominated(front[0], front, tolerance=0.0)
+    assert not eps_dominated(front[0], front, tolerance=0.2)
+
+
+@pytest.mark.tier1
+def test_front_matches_cover_and_slack():
+    ref = [_rec(2.0, 100.0), _rec(1.0, 50.0)]
+    ok, slack = front_matches(ref, ref, tolerance=0.0)
+    assert ok and slack == 0.0
+    # candidate 5% short on ipc: covered at tol 0.1, not at tol 0.01
+    cand = [_rec(1.9, 100.0), _rec(0.95, 50.0)]
+    ok, slack = front_matches(cand, ref, tolerance=0.1)
+    assert ok and slack == pytest.approx(0.05)
+    assert not front_matches(cand, ref, tolerance=0.01)[0]
+    # empty candidate cannot cover a non-empty reference
+    ok, slack = front_matches([], ref)
+    assert not ok and slack == float("inf")
+    assert front_matches([], [], tolerance=0.0) == (True, 0.0)
+
+
+@pytest.mark.tier1
+def test_scale_fidelity_feasible_multiples():
+    pt = SweepPoint(kernel="expf", policy="copiftv2", unroll=8, n_samples=128)
+    assert scale_fidelity(pt, 8).n_samples == 16   # multiple of unroll
+    assert scale_fidelity(pt, 1) is pt
+    # never rounds below one unroll step, never above the original
+    assert scale_fidelity(pt, 1000).n_samples == 8
+    tiny = dataclasses.replace(pt, n_samples=8)
+    assert scale_fidelity(tiny, 8) is tiny
+    # cluster points stay partitionable: multiple of unroll x cores
+    cl = dataclasses.replace(pt, n_cores=4)
+    assert scale_fidelity(cl, 8).n_samples % (8 * 4) == 0
+
+
+@pytest.mark.tier1
+def test_adaptive_sweep_validates_inputs():
+    pts = _small_grid()[:2]
+    with pytest.raises(ValueError):
+        adaptive_sweep(pts, fidelity_ladder=(8, 2))     # must end at 1
+    with pytest.raises(ValueError):
+        adaptive_sweep(pts, fidelity_ladder=(2, 8, 1))  # must decrease
+    with pytest.raises(ValueError):
+        adaptive_sweep(pts, fidelity_ladder=())
+    with pytest.raises(ValueError):
+        adaptive_sweep(pts, tolerance=1.5)
+    with pytest.raises(ValueError):
+        run_search(pts, strategy="random")
+    with pytest.raises(TypeError):
+        run_search(pts, strategy="exhaustive", tolerance=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Differential oracle: adaptive vs exhaustive on a small grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_adaptive_front_matches_exhaustive_within_tolerance():
+    pts = _small_grid()
+    tol = 0.1
+    exhaustive = run_sweep(pts, workers=1)
+    adaptive, meta = adaptive_sweep(pts, workers=1, tolerance=tol)
+    # meta provenance: strategy + fidelity ladder + monotone survivor counts
+    assert meta["strategy"] == "adaptive"
+    assert meta["fidelity_ladder"][-1] == 1
+    assert meta["n_points"] == len(pts)
+    assert meta["n_full_fidelity"] == len(adaptive) <= len(pts)
+    evs = [r["evaluated"] for r in meta["rungs"]]
+    assert evs[0] == len(pts) and evs == sorted(evs, reverse=True)
+    # every surviving record is exact: it equals the exhaustive record
+    by_key = {}
+    for rec in exhaustive:
+        by_key[(rec.kernel, rec.policy, rec.queue_depth, rec.queue_latency,
+                rec.queue_depth_i2f, rec.queue_depth_f2i)] = rec
+    for rec in adaptive:
+        key = (rec.kernel, rec.policy, rec.queue_depth, rec.queue_latency,
+               rec.queue_depth_i2f, rec.queue_depth_f2i)
+        assert rec == by_key[key]
+    # the recovered per-kernel fronts cover the exhaustive fronts within tol
+    fx, fa = pareto_by_kernel(exhaustive), pareto_by_kernel(adaptive)
+    for kernel, ref_front in fx.items():
+        ok, slack = front_matches(fa.get(kernel, []), ref_front, tol)
+        assert ok, f"{kernel}: front slack {slack} > {tol}"
+
+
+@pytest.mark.tier1
+def test_run_search_dispatch_and_run_sweep_strategy():
+    pts = _small_grid()[:8]
+    recs_x, meta_x = run_search(pts, strategy="exhaustive", workers=1)
+    assert meta_x == {"strategy": "exhaustive", "n_points": len(pts)}
+    assert recs_x == run_sweep(pts, workers=1)
+    recs_a, meta_a = run_search(pts, strategy="adaptive", workers=1)
+    assert meta_a["strategy"] == "adaptive"
+    assert recs_a == run_sweep(pts, workers=1, strategy="adaptive")
+    with pytest.raises(ValueError):
+        run_sweep(pts, workers=1, strategy="random")

@@ -358,6 +358,7 @@ def test_benchmarks_run_smoke():
     assert "dse_peak_ipc" in res.stdout
     assert "claims_peak_ipc_v2" in res.stdout
     assert "sweep_perf_speedup_event_cached" in res.stdout
+    assert "sweep_scale_speedup_cached" in res.stdout
     assert "calibration_expf_ipc_gain" in res.stdout
     assert "cluster_headline_speedup_4c" in res.stdout
     assert "cluster_pipeline_cluster_matmul_x4_ipc_ratio" in res.stdout
@@ -365,4 +366,76 @@ def test_benchmarks_run_smoke():
     # per-section pass/fail summary: every section reports, none failed
     assert "# --- summary ---" in res.stdout
     assert "# FAIL" not in res.stdout
-    assert res.stdout.count("# PASS:") == 7
+    assert res.stdout.count("# PASS:") == 8
+
+
+# ---------------------------------------------------------------------------
+# Batch engine x worker partitioning (PR 7): grouping happens once, inside
+# each worker's partition — never double-partitioned, never starving workers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_batch_partition_no_double_partition_and_no_starvation(monkeypatch):
+    """`partition_points` fans the grid out once; each worker's
+    `_run_indexed` then groups its own slice by lowered program.  On small
+    grids the partition must neither submit empty workers nor split a
+    lowering-key group (which would shrink batch widths across workers)."""
+    from repro.core import sweep as sweep_mod
+    pts = grid(kernels=["expf"], policies=(P.COPIFT,),
+               queue_depths=(1, 2, 4, 8), queue_latencies=(1, 8),
+               n_samples=16, engine="batch")
+    # 8 points, 1 lowering-key group (COPIFT is depth/latency-insensitive):
+    # many workers must collapse to one non-empty partition, not 7 idle ones
+    parts = [p for p in partition_points(pts, 16) if p]
+    assert len(parts) == 1 and sorted(parts[0]) == list(range(len(pts)))
+    # the batch path sees each group exactly once per worker: count
+    # BatchStepper constructions through the serial run_sweep path
+    calls = []
+    real = sweep_mod.BatchStepper
+
+    class CountingBatchStepper(real):
+        def __init__(self, prog, cfgs):
+            calls.append(len(cfgs))
+            super().__init__(prog, cfgs)
+
+    monkeypatch.setattr(sweep_mod, "BatchStepper", CountingBatchStepper)
+    recs = run_sweep(pts, workers=1)
+    assert all(r.ok for r in recs)
+    assert calls == [len(pts)]       # one group-wide batch, no re-partition
+
+
+@pytest.mark.tier1
+def test_batch_records_group_by_program_identity():
+    """Depth-insensitive policies share one lowered program across the whole
+    machine axis; the grouped batch path must merge them into a single
+    BatchStepper call and still return records in input order."""
+    from repro.core.sweep import _batch_records, _batch_eligible
+    pts = grid(kernels=["expf"], policies=(P.COPIFT, P.COPIFTV2),
+               queue_depths=(2, 4, 8), queue_latencies=(1, 4),
+               n_samples=16, engine="batch")
+    assert all(_batch_eligible(p) for p in pts)
+    clear_worker_caches()
+    out = _batch_records(list(enumerate(pts)))
+    assert sorted(i for i, _ in out) == list(range(len(pts)))
+    for i, rec in out:
+        ref = run_point(dataclasses.replace(pts[i], engine="event"))
+        assert dataclasses.replace(rec, engine="x") == \
+            dataclasses.replace(ref, engine="x")
+
+
+@pytest.mark.tier1
+def test_batch_engine_mixed_with_cluster_and_invalid_geometry():
+    """_run_indexed peels batch-eligible points; clustered and malformed
+    points take the per-point path — one record per index either way."""
+    from repro.core.sweep import _run_indexed
+    pts = [SweepPoint(kernel="expf", policy="copiftv2", n_samples=16,
+                      engine="batch"),
+           SweepPoint(kernel="expf", policy="copiftv2", n_samples=16,
+                      engine="batch", n_cores=2),
+           SweepPoint(kernel="expf", policy="copiftv2", n_samples=16,
+                      engine="batch", n_cores=0)]
+    out = dict(_run_indexed(list(enumerate(pts))))
+    assert len(out) == 3
+    assert out[0].ok and out[0].engine == "batch"
+    assert out[1].ok and out[1].n_cores == 2      # event-engine fallback
+    assert out[2].status == "rejected"
