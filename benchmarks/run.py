@@ -42,8 +42,9 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     if args.smoke:
-        from . import (calibration, cluster_pipeline, cluster_scaling, dse,
-                       fig3, front_diff, sweep_perf, sweep_scale)
+        from . import (calibration, cluster_pipeline, cluster_scaling,
+                       cluster_sweep_scale, dse, fig3, front_diff,
+                       sweep_perf, sweep_scale)
         _run_sections([
             ("fig3 smoke (machine model, small n)", fig3.smoke),
             ("dse smoke (tiny sweep grid + equivalence fuzz)", dse.smoke),
@@ -51,6 +52,8 @@ def main(argv=None) -> None:
              sweep_perf.smoke),
             ("sweep_scale smoke (batch engine parity + adaptive front "
              "cover)", sweep_scale.smoke),
+            ("cluster_sweep_scale smoke (batch cluster engine parity on "
+             "cluster/pipeline grids)", cluster_sweep_scale.smoke),
             ("calibration smoke (Pareto-selected vs hard-coded default)",
              calibration.smoke),
             ("cluster scaling smoke (weak/strong 1-4 cores + bank "
@@ -63,8 +66,9 @@ def main(argv=None) -> None:
         return
 
     from . import (calibration, cluster_pipeline, cluster_scaling,
-                   collective_policy, dse, fig3, front_diff, kernel_bench,
-                   roofline_table, sweep_perf, sweep_scale)
+                   cluster_sweep_scale, collective_policy, dse, fig3,
+                   front_diff, kernel_bench, roofline_table, sweep_perf,
+                   sweep_scale)
     _run_sections([
         ("fig3 (paper Fig.3a/b/c via the machine model)", fig3.main),
         ("dse (design-space sweep + Pareto fronts)", dse.main),
@@ -72,6 +76,8 @@ def main(argv=None) -> None:
          sweep_perf.main),
         ("sweep_scale (batch engine >=10x gate + adaptive front cover)",
          sweep_scale.main),
+        ("cluster_sweep_scale (batch cluster engine >=8x gate on "
+         "cluster/pipeline grids)", cluster_sweep_scale.main),
         ("calibration (Pareto-selected operating points vs defaults)",
          calibration.main),
         ("cluster scaling (weak/strong 1-8 cores + bank contention)",

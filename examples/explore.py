@@ -6,11 +6,12 @@ full sweep and the fronts as CSV, and re-checks on *every* swept point that
 the lowered program computes bit-identical outputs to the sequential baseline
 interpreter — the sweep doubles as the repo's largest semantics fuzzer.
 
-Usage (defaults sweep 7560 configurations: 7 kernels x 3 policies x
-5 depths x 4 latencies x 2 unrolls x 3x3 asymmetric overrides — thousands
-of points are the PR-7 baseline now that the batch engine advances every
-point sharing a lowered program in one vectorized pass; an estimated-cost
-line prints before the sweep launches):
+Usage (defaults sweep 22680 configurations: 7 kernels x 3 policies x
+5 depths x 4 latencies x 2 unrolls x 3x3 asymmetric overrides x 3 core
+counts — the cluster axis joined the default grid in PR 8, when the
+lockstep batch engine learned to advance clustered and pipelined points
+too (``core.batch_cluster``); an estimated-cost line blending each
+point's actual engine rate prints before the sweep launches):
 
     PYTHONPATH=src python examples/explore.py
     PYTHONPATH=src python examples/explore.py \
@@ -45,14 +46,16 @@ degree.  Pipelined points need an even core count and the COPIFTv2 policy
         --cores 2,4 --banks 2,8 --cq-depths 2,4,8 --dma-buffers 1,2,4
 
 ``--engine`` picks the simulation core: ``batch`` (default) groups every
-point sharing a lowered program and advances the whole group in one numpy
-max-recurrence pass (``core.batch_machine``) — bit-identical to ``event``
-(the per-point event-driven time-skip engine), which is in turn
-bit-identical to ``cycle`` (the naive per-cycle reference stepper).
-Clustered points and batch-inexpressible programs fall back to the event
-engine automatically.  A timing report (wall time, points/sec, ms/config)
-prints either way; ``--engine event``/``cycle`` exist for differential
-checking and benchmarking.
+point sharing a lowered program (single-PE: ``core.batch_machine``) or a
+partitioned program set (clustered/pipelined: ``core.batch_cluster``) and
+advances the whole group in one numpy max-recurrence pass — bit-identical
+to ``event`` (the per-point event-driven time-skip engine), which is in
+turn bit-identical to ``cycle`` (the naive per-cycle reference stepper).
+Batch-inexpressible programs and predicted bank-conflict/deadlock points
+fall back to the scalar engines automatically, so the batch path is
+always sound.  A timing report (wall time, points/sec, ms/config) prints
+either way; ``--engine event``/``cycle`` exist for differential checking
+and benchmarking.
 
 ``--strategy`` picks the search discipline: ``exhaustive`` (default)
 evaluates every grid point; ``adaptive`` runs front-guided successive
@@ -106,21 +109,42 @@ from repro.core.calibrate import OBJECTIVES, calibration_dir
 from repro.core.search import DEFAULT_LADDER, DEFAULT_TOLERANCE
 
 #: rough single-worker engine rates (points/sec) for the estimated-cost
-#: line, from ``artifacts/BENCH_sweep_scale.json`` on the 2880-pt grid —
-#: an expectation-setter before a long sweep launches, not a promise
-NOMINAL_RATES = {"batch": 4000.0, "event": 180.0, "cycle": 45.0}
+#: line, from ``artifacts/BENCH_sweep_scale.json`` (single-PE grids) and
+#: ``artifacts/BENCH_cluster_sweep_scale.json`` (cluster/pipeline grids) —
+#: an expectation-setter before a long sweep launches, not a promise.
+#: ``batch_cluster`` is the lockstep cluster engine's rate: clustered and
+#: pipelined points on ``--engine batch`` run there, not at the single-PE
+#: batch rate, so the estimate blends per point (the pre-PR-8 line quoted
+#: 4000 pts/s for grids that actually ran at the ~180 pts/s event rate).
+NOMINAL_RATES = {"batch": 4000.0, "batch_cluster": 1500.0,
+                 "event": 180.0, "cycle": 45.0}
 
 
 def _ints(s):
     return tuple(int(x) for x in s.split(",") if x)
 
 
-def _estimated_cost_line(n_points, engine, workers, strategy):
-    rate = NOMINAL_RATES.get(engine, NOMINAL_RATES["event"]) * max(1, workers)
+def _point_rate(pt, engine):
+    """Nominal points/sec for one sweep point under ``engine``."""
+    if engine == "batch":
+        return NOMINAL_RATES["batch_cluster" if pt.clustered else "batch"]
+    return NOMINAL_RATES.get(engine, NOMINAL_RATES["event"])
+
+
+def _estimated_cost_line(pts, engine, workers, strategy):
+    """Blended cost estimate: each point contributes at the rate of the
+    engine that will actually simulate it (clustered/pipelined points on
+    the batch engine run through the lockstep cluster engine), so mixed
+    grids no longer quote the single-PE batch nominal for everything."""
+    w = max(1, workers)
+    seconds = sum(1.0 / _point_rate(pt, engine) for pt in pts) / w
+    rate = len(pts) / seconds if seconds else 0.0
+    n_cl = sum(1 for pt in pts if pt.clustered)
+    mix = (f"; {n_cl}/{len(pts)} clustered" if 0 < n_cl < len(pts) else "")
     note = (" (adaptive search prunes dominated points after the first "
             "low-fidelity rung)" if strategy == "adaptive" else "")
-    return (f"estimated cost: {n_points} points / ~{rate:.0f} pts/s "
-            f"[{engine}, {workers} worker(s)] ~= {n_points / rate:.1f}s"
+    return (f"estimated cost: {len(pts)} points / ~{rate:.0f} pts/s "
+            f"[{engine}, {workers} worker(s){mix}] ~= {seconds:.1f}s"
             f"{note}")
 
 
@@ -186,9 +210,9 @@ def calibrate_main(argv) -> int:
         grid_kw["policies"] = [ExecutionPolicy.parse(p)
                                for p in args.policies.split(",")]
     out_dir = args.out_dir or calibration_dir()
-    n_est = len(grid(kernels=kernels, **grid_kw))
+    pts_est = grid(kernels=kernels, **grid_kw)
     print(_estimated_cost_line(
-        n_est, args.engine, resolve_workers(n_est, args.workers),
+        pts_est, args.engine, resolve_workers(len(pts_est), args.workers),
         args.strategy))
     search_kw = (dict(tolerance=args.search_tolerance,
                       fidelity_ladder=args.fidelity_ladder)
@@ -239,11 +263,12 @@ def main(argv=None) -> int:
     ap.add_argument("--depths-f2i", type=_opt_ints, default=(None, 2, 8),
                     help="asymmetric F2I depth overrides (comma list; "
                          "'-' = symmetric)")
-    ap.add_argument("--cores", type=_ints, default=(1,),
+    ap.add_argument("--cores", type=_ints, default=(1, 2, 4),
                     help="cluster core counts to sweep (work-partitioned "
                          "disjoint sample ranges; n-samples must divide "
                          "evenly; 1 = the single-PE machine, bit-identical "
-                         "to the plain stepper)")
+                         "to the plain stepper; multi-core points ride the "
+                         "lockstep batch-cluster engine by default)")
     ap.add_argument("--banks", type=_opt_ints, default=(None,),
                     help="TCDM bank counts to sweep (comma list; 'inf' = "
                          "conflict-free/infinite banks)")
@@ -309,8 +334,7 @@ def main(argv=None) -> int:
           f"{len(args.banks)} bank-geometries; n_samples={args.n_samples}) "
           f"[engine={args.engine}, strategy={args.strategy}, "
           f"workers={workers}] ...")
-    print(_estimated_cost_line(len(pts), args.engine, workers,
-                               args.strategy))
+    print(_estimated_cost_line(pts, args.engine, workers, args.strategy))
     search_kw = (dict(tolerance=args.search_tolerance,
                       fidelity_ladder=args.fidelity_ladder)
                  if args.strategy == "adaptive" else {})

@@ -185,7 +185,8 @@ _DEFAULT_RC_POLICY = RunConfig.__dataclass_fields__["policy"].default
 
 def resolve_run_config(rc: RunConfig, workload: str,
                        operating_point: Optional[OperatingPoint] = None,
-                       policy_table: Optional[PolicyTable] = None
+                       policy_table: Optional[PolicyTable] = None,
+                       queue_latency: Optional[int] = None
                        ) -> Tuple[RunConfig, OperatingPoint]:
     """Resolve ``workload``'s operating point once, at startup, and thread
     its policy into the run config.
@@ -196,14 +197,18 @@ def resolve_run_config(rc: RunConfig, workload: str,
     applies; otherwise the calibration-backed table (``policy_table`` or
     the process default honouring ``REPRO_CALIBRATION_DIR``) supplies the
     whole point, falling back to the paper's hard-coded defaults when no
-    artifact exists."""
+    artifact exists.  ``queue_latency`` pins the machine's queue-visibility
+    latency class for schema-v4 per-class selections (defaulting to the
+    workload's ``WORKLOAD_QUEUE_LATENCIES`` entry, the global selection for
+    classes the calibration never swept)."""
     table = policy_table if policy_table is not None else default_table()
     if operating_point is not None:
         op = table.resolve(workload, override=operating_point)
     elif rc.policy is not _DEFAULT_RC_POLICY:
-        op = table.resolve(workload, policy=rc.policy)
+        op = table.resolve(workload, queue_latency=queue_latency,
+                           policy=rc.policy)
     else:
-        op = table.resolve(workload)
+        op = table.resolve(workload, queue_latency=queue_latency)
     return dataclasses.replace(rc, policy=op.policy), op
 
 

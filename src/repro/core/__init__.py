@@ -3,6 +3,9 @@ cycle-approximate Snitch/FPSS machine model, a design-space exploration
 engine sweeping (kernel x policy x queue geometry x unroll) grids with
 Pareto-front extraction, plus the ExecutionPolicy enum that threads the
 dual-stream idea through the TPU layers of the framework."""
+from .batch_cluster import (BatchClusterDeadlock, BatchClusterStepper,
+                            BatchClusterUnsupported, batch_cluster_simulate,
+                            batch_cluster_supported)
 from .batch_machine import (BatchDeadlock, BatchStepper, BatchUnsupported,
                             batch_simulate, batch_supported)
 from .bench_kernels import KERNELS
@@ -21,8 +24,9 @@ from .calibrate import (SCHEMA_VERSION, CalibrationError, CalibrationRecord,
                         validate_artifact, write_artifact)
 from .pareto import (dominates, format_front, pareto_by_kernel, pareto_front,
                      read_csv, write_csv)
-from .policy import (WORKLOAD_PROXIES, ExecutionPolicy, OperatingPoint,
-                     PolicyTable, clear_policy_table_cache, default_table)
+from .policy import (WORKLOAD_PROXIES, WORKLOAD_QUEUE_LATENCIES,
+                     ExecutionPolicy, OperatingPoint, PolicyTable,
+                     clear_policy_table_cache, default_table)
 from .search import (adaptive_sweep, eps_dominated, front_matches,
                      run_search, scale_fidelity)
 from .sweep import (CSV_FIELDS, LEGACY_CSV_FIELDS, PRE_PIPELINE_CSV_FIELDS,
@@ -44,7 +48,8 @@ __all__ = [
     "SCHEMA_VERSION", "CalibrationError", "CalibrationRecord",
     "StaleArtifactError", "calibrate", "calibration_dir", "load_calibration",
     "select_operating_point", "validate_artifact", "write_artifact",
-    "WORKLOAD_PROXIES", "ExecutionPolicy", "OperatingPoint", "PolicyTable",
+    "WORKLOAD_PROXIES", "WORKLOAD_QUEUE_LATENCIES", "ExecutionPolicy",
+    "OperatingPoint", "PolicyTable",
     "clear_policy_table_cache", "default_table",
     "TransformConfig", "analyze", "lower", "partition_kernel",
     "partition_pipeline",
@@ -54,6 +59,8 @@ __all__ = [
     "run_point", "run_sweep", "sweep_summary",
     "BatchDeadlock", "BatchStepper", "BatchUnsupported", "batch_simulate",
     "batch_supported",
+    "BatchClusterDeadlock", "BatchClusterStepper", "BatchClusterUnsupported",
+    "batch_cluster_simulate", "batch_cluster_supported",
     "adaptive_sweep", "eps_dominated", "front_matches", "run_search",
     "scale_fidelity",
 ]

@@ -19,7 +19,10 @@ DSE calibration artifacts (``core.calibrate``, written by
 ``examples/explore.py calibrate`` into ``artifacts/calibration/`` or the
 ``REPRO_CALIBRATION_DIR`` override); consumers fall back to the paper's
 hard-coded headline point when no artifact exists, and an explicit override
-always wins.  Resolution happens once at startup — the selection machinery
+always wins.  Workloads whose fabric pins a queue-visibility latency class
+(:data:`WORKLOAD_QUEUE_LATENCIES`) resolve through the schema-v4 per-class
+selections when the artifact carries them, with the global selection as the
+fallback.  Resolution happens once at startup — the selection machinery
 stays off the hot path (cf. Snitch, arXiv:2002.10143).
 """
 from __future__ import annotations
@@ -98,6 +101,23 @@ WORKLOAD_PROXIES: Dict[str, str] = {
     "train": "dequant_dot",
 }
 
+#: Consumer workloads' pinned queue-visibility latency class.  The fabric a
+#: workload's machine analogue communicates over fixes how many cycles a
+#: pushed value takes to become pop-visible, and the schema-v4 calibration
+#: artifacts carry per-latency-class selections (``selected_by_latency``)
+#: precisely so these consumers can take the best point *at their latency*
+#: instead of the global winner: ``queue_matmul`` / ``moe_gemm`` / ``train``
+#: stream operand tiles through the shared-TCDM interconnect (one traversal
+#: each way: class 2), while ``serve`` decode's softmax/gating FIFOs are
+#: core-local (class 1).  :meth:`PolicyTable.resolve` falls back to the
+#: global selection when the class was never swept.
+WORKLOAD_QUEUE_LATENCIES: Dict[str, int] = {
+    "queue_matmul": 2,
+    "moe_gemm": 2,
+    "serve": 1,
+    "train": 2,
+}
+
 
 class PolicyTable:
     """Workload → :class:`OperatingPoint` resolution, calibration-backed.
@@ -107,13 +127,23 @@ class PolicyTable:
     1. an explicit ``override`` point (or keyword field overrides) — wins
        unconditionally, tagged ``source="override"``;
     2. a calibrated entry for the workload itself, then for its
-       :data:`WORKLOAD_PROXIES` proxy kernel — tagged ``"calibrated"``;
+       :data:`WORKLOAD_PROXIES` proxy kernel — tagged ``"calibrated"``.
+       When the workload pins a queue-latency class (an explicit
+       ``queue_latency=`` argument, or its :data:`WORKLOAD_QUEUE_LATENCIES`
+       entry) and the artifact carries a schema-v4 per-class selection for
+       it, that class's point is returned; the global selection is the
+       fallback for classes the calibration never swept;
     3. the :class:`OperatingPoint` defaults — tagged ``"default"``.
     """
 
     def __init__(self, entries: Optional[Dict[str, OperatingPoint]] = None,
-                 directory: Optional[str] = None):
+                 directory: Optional[str] = None,
+                 records: Optional[Dict[str, "object"]] = None):
         self.entries: Dict[str, OperatingPoint] = dict(entries or {})
+        #: kernel -> full CalibrationRecord, kept alongside the resolved
+        #: global points so latency-class resolution can reach
+        #: ``operating_point_for`` (in-memory tables have none)
+        self.records: Dict[str, "object"] = dict(records or {})
         self.directory = directory
 
     @classmethod
@@ -127,6 +157,7 @@ class PolicyTable:
                                 load_artifact)
         directory = directory or calibration_dir()
         entries: Dict[str, OperatingPoint] = {}
+        records: Dict[str, "object"] = {}
         if os.path.isdir(directory):
             for fname in sorted(os.listdir(directory)):
                 if not fname.endswith(".json"):
@@ -141,18 +172,24 @@ class PolicyTable:
                         stacklevel=2)
                     continue
                 entries[rec.kernel] = rec.operating_point()
-        return cls(entries, directory=directory)
+                records[rec.kernel] = rec
+        return cls(entries, directory=directory, records=records)
 
     def resolve(self, workload: str,
                 override: Optional[OperatingPoint] = None,
+                queue_latency: Optional[int] = None,
                 **field_overrides) -> OperatingPoint:
         if override is not None:
             return dataclasses.replace(override, source="override")
-        point = self.entries.get(workload)
-        if point is None:
-            proxy = WORKLOAD_PROXIES.get(workload)
-            if proxy is not None:
-                point = self.entries.get(proxy)
+        key = workload if workload in self.entries else \
+            WORKLOAD_PROXIES.get(workload)
+        point = self.entries.get(key) if key is not None else None
+        if point is not None:
+            if queue_latency is None:
+                queue_latency = WORKLOAD_QUEUE_LATENCIES.get(workload)
+            rec = self.records.get(key)
+            if rec is not None and queue_latency is not None:
+                point = rec.operating_point_for(queue_latency)  # type: ignore[attr-defined]
         if point is None:
             point = OperatingPoint()
         if field_overrides:

@@ -34,10 +34,15 @@ Engines: every point carries an ``engine`` field.  ``"cycle"`` and
 lowered program* in one vectorized pass — each worker groups its partition
 by program identity (:func:`_batch_records`), so the whole
 ``queue_depth x queue_latency x i2f x f2i`` machine axis of a
-depth-insensitive policy collapses into a single numpy evaluation.  The
-batch engine is bit-identical to the event engine (enforced by
-``tests/test_batch_machine.py``); points it cannot express fall back to the
-event stepper per point, and clustered points always use the event engine.
+depth-insensitive policy collapses into a single numpy evaluation.
+Clustered and pipelined points batch the same way (PR 8): grouped by
+*partitioned-program-set* identity and advanced through
+``core.batch_cluster.BatchClusterStepper`` (:func:`_batch_cluster_records`),
+collapsing the ``banks x cq_depth x machine`` axes of one partitioning
+into a single pass.  Both batch engines are bit-identical to the event
+engine (enforced by ``tests/test_batch_machine.py`` /
+``tests/test_batch_cluster.py``); program sets they cannot express fall
+back to the per-point event stepper.
 
 Strategies: :func:`run_sweep` evaluates every point exhaustively by
 default; ``strategy="adaptive"`` dispatches to
@@ -52,6 +57,8 @@ import os
 from dataclasses import asdict, dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .batch_cluster import (BatchClusterDeadlock, BatchClusterStepper,
+                            BatchClusterUnsupported)
 from .batch_machine import BatchDeadlock, BatchStepper, BatchUnsupported
 from .bench_kernels import KERNELS
 from .cluster import ClusterConfig, ClusterStepper
@@ -397,10 +404,13 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
     sweep always yields one record per point.  ``use_caches=False`` bypasses
     the per-worker memos (the pre-caching pipeline, kept for benchmarking).
 
-    ``engine="batch"`` on a single point runs a width-1 batch (the grouped
-    fast path lives in :func:`_batch_records`, reached via
-    :func:`run_sweep`); batch-inexpressible programs fall back to the event
-    stepper, and clustered points always simulate on the event engine.
+    ``engine="batch"`` on a single point runs a width-1 batch — single-PE
+    points through :class:`~.batch_machine.BatchStepper`, clustered and
+    pipelined points through
+    :class:`~.batch_cluster.BatchClusterStepper` (the grouped fast paths
+    live in :func:`_batch_records` / :func:`_batch_cluster_records`,
+    reached via :func:`run_sweep`); batch-inexpressible programs fall back
+    to the per-point event stepper.
     """
     dfg = KERNELS[pt.kernel]
     policy = ExecutionPolicy.parse(pt.policy)
@@ -446,62 +456,65 @@ def run_point(pt: SweepPoint, *, use_caches: bool = True) -> SweepRecord:
     return _ok_record(base, res, equivalent)
 
 
-def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
-                       base: Dict, tcfg: TransformConfig,
-                       mcfg: MachineConfig,
-                       use_caches: bool) -> SweepRecord:
-    """The cluster leg of :func:`run_point`: partition the kernel across
-    ``pt.n_cores``, run the per-core programs under the shared bank arbiter,
-    and check the *concatenated* per-core outputs against the sequential
-    interpreter.  Work-partitioned points assign disjoint sample ranges per
-    core (core ``c`` owns ``[c*chunk, (c+1)*chunk)``); pipelined points
-    assign them per producer/consumer *pair* — only the odd-indexed
-    (consumer) cores hold outputs."""
-    try:
-        if pt.pipeline:
-            if policy is not ExecutionPolicy.COPIFTV2:
-                return SweepRecord(
-                    **base, status="rejected",
-                    detail=f"pipeline partitioning is COPIFTv2-only "
-                           f"(got policy {policy.value!r})")
-            if use_caches:
-                progs = _pipeline_cached(pt.kernel, tcfg, pt.n_cores,
-                                         pt.dma_buffers)
-            else:
-                progs = partition_pipeline(dfg, tcfg, pt.n_cores,
-                                           dma_buffers=pt.dma_buffers,
-                                           use_prefix_cache=False)
-        elif use_caches:
-            progs = _partition_cached(pt.kernel, policy.value, tcfg,
-                                      pt.n_cores)
-        else:
-            progs = partition_kernel(dfg, policy, tcfg, pt.n_cores,
-                                     use_prefix_cache=False)
-    except ValueError as e:
-        return SweepRecord(**base, status="rejected", detail=str(e))
-    ccfg = ClusterConfig(n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
+def _pipeline_policy_detail(pt: SweepPoint,
+                            policy: ExecutionPolicy) -> Optional[str]:
+    """A rejection message for pipelined points on the wrong policy."""
+    if pt.pipeline and policy is not ExecutionPolicy.COPIFTV2:
+        return (f"pipeline partitioning is COPIFTv2-only "
+                f"(got policy {policy.value!r})")
+    return None
+
+
+def _cluster_progs(pt: SweepPoint, dfg, policy: ExecutionPolicy,
+                   tcfg: TransformConfig, use_caches: bool) -> Tuple:
+    """The per-core program set for a clustered point.  Raises ValueError
+    for infeasible partitionings, exactly like the uncached transforms.
+    The memoized variants return one tuple object per distinct
+    partitioning, so ``id(progs)`` doubles as the batch grouping key."""
+    if pt.pipeline:
+        if use_caches:
+            return _pipeline_cached(pt.kernel, tcfg, pt.n_cores,
+                                    pt.dma_buffers)
+        return tuple(partition_pipeline(dfg, tcfg, pt.n_cores,
+                                        dma_buffers=pt.dma_buffers,
+                                        use_prefix_cache=False))
+    if use_caches:
+        return _partition_cached(pt.kernel, policy.value, tcfg, pt.n_cores)
+    return tuple(partition_kernel(dfg, policy, tcfg, pt.n_cores,
+                                  use_prefix_cache=False))
+
+
+def _ccfg_for(pt: SweepPoint, mcfg: MachineConfig) -> ClusterConfig:
+    return ClusterConfig(n_cores=pt.n_cores, tcdm_banks=pt.tcdm_banks,
                          machine=mcfg, cq_depth=pt.cq_depth,
                          dma_buffers=pt.dma_buffers)
-    try:
-        # the batch engine is single-PE only: clustered points simulate on
-        # the event engine (the record still carries engine="batch")
-        sim_engine = "event" if pt.engine == "batch" else pt.engine
-        res = ClusterStepper(progs, ccfg, engine=sim_engine).run()
-    except DeadlockError as e:
-        return SweepRecord(**base, status="deadlock", detail=str(e))
-    ref = (_reference_cached(pt.kernel, pt.n_samples) if use_caches
-           else dfg.eval_reference(pt.n_samples))
+
+
+def _cluster_ok_record(pt: SweepPoint, base: Dict, dfg, res, ref,
+                       equiv_memo: Optional[Dict] = None) -> SweepRecord:
+    """Flatten a :class:`~.cluster.ClusterResult` into an ok record, checking
+    the *concatenated* per-core outputs against the sequential interpreter.
+    Work-partitioned points assign disjoint sample ranges per core (core
+    ``c`` owns ``[c*chunk, (c+1)*chunk)``); pipelined points assign them per
+    producer/consumer *pair* — only the odd-indexed (consumer) cores hold
+    outputs.  ``equiv_memo`` (grouped batch path) caches the check per
+    distinct env tuple: lockstep points of one group share env objects."""
     if pt.pipeline:
         # outputs live on the consumer cores (odd indices), one per pair
         owners = res.core_results[1::2]
     else:
         owners = res.core_results
     chunk = pt.n_samples // len(owners)
-    equivalent = all(
-        [core.env.get(f"{node.name}@{i}") for i in range(chunk)]
-        == ref[node.name][c * chunk:(c + 1) * chunk]
-        for node in dfg.outputs()
-        for c, core in enumerate(owners))
+    key = tuple(id(core.env) for core in owners)
+    equivalent = equiv_memo.get(key) if equiv_memo is not None else None
+    if equivalent is None:
+        equivalent = all(
+            [core.env.get(f"{node.name}@{i}") for i in range(chunk)]
+            == ref[node.name][c * chunk:(c + 1) * chunk]
+            for node in dfg.outputs()
+            for c, core in enumerate(owners))
+        if equiv_memo is not None:
+            equiv_memo[key] = equivalent
     s = res.summary()
     return SweepRecord(
         **base, status="ok", cycles=s["cycles"], ipc=s["ipc"],
@@ -512,6 +525,44 @@ def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
         equivalent=equivalent, ipc_per_core=s["ipc_per_core"],
         bank_stalls=s["bank_stalls"], cq_stalls=s["cq_stalls"],
         dma_stalls=s["dma_stalls"], stalls=s["stalls"])
+
+
+def _run_cluster_point(pt: SweepPoint, dfg, policy: ExecutionPolicy,
+                       base: Dict, tcfg: TransformConfig,
+                       mcfg: MachineConfig,
+                       use_caches: bool) -> SweepRecord:
+    """The cluster leg of :func:`run_point`: partition the kernel across
+    ``pt.n_cores`` and run the per-core programs under the shared bank
+    arbiter.  ``engine="batch"`` runs a width-1
+    :class:`~.batch_cluster.BatchClusterStepper` (the grouped fast path
+    lives in :func:`_batch_cluster_records`); inexpressible program sets
+    fall back to the per-point event engine."""
+    detail = _pipeline_policy_detail(pt, policy)
+    if detail is not None:
+        return SweepRecord(**base, status="rejected", detail=detail)
+    try:
+        progs = _cluster_progs(pt, dfg, policy, tcfg, use_caches)
+    except ValueError as e:
+        return SweepRecord(**base, status="rejected", detail=str(e))
+    ccfg = _ccfg_for(pt, mcfg)
+    res = None
+    if pt.engine == "batch":
+        try:
+            out = BatchClusterStepper(progs, [ccfg]).run()[0]
+        except BatchClusterUnsupported:
+            out = None               # inexpressible: event-stepper fallback
+        if isinstance(out, BatchClusterDeadlock):
+            return SweepRecord(**base, status="deadlock", detail=out.message)
+        res = out
+    if res is None:
+        try:
+            sim_engine = "event" if pt.engine == "batch" else pt.engine
+            res = ClusterStepper(progs, ccfg, engine=sim_engine).run()
+        except DeadlockError as e:
+            return SweepRecord(**base, status="deadlock", detail=str(e))
+    ref = (_reference_cached(pt.kernel, pt.n_samples) if use_caches
+           else dfg.eval_reference(pt.n_samples))
+    return _cluster_ok_record(pt, base, dfg, res, ref)
 
 
 def partition_points(points: Sequence[SweepPoint],
@@ -543,10 +594,11 @@ def partition_points(points: Sequence[SweepPoint],
 
 
 def _batch_eligible(pt: SweepPoint) -> bool:
-    """Points the grouped batch path handles: batch-engine, single-PE, and
-    well-formed geometry (everything else goes through :func:`run_point`)."""
-    return (pt.engine == "batch" and not pt.clustered
-            and _geometry_detail(pt) is None)
+    """Points the grouped batch paths handle: batch-engine with well-formed
+    geometry — single-PE points go through :func:`_batch_records`, clustered
+    and pipelined ones through :func:`_batch_cluster_records` (everything
+    else goes through :func:`run_point`)."""
+    return pt.engine == "batch" and _geometry_detail(pt) is None
 
 
 def _batch_records(pairs: List[Tuple[int, SweepPoint]]
@@ -603,17 +655,83 @@ def _batch_records(pairs: List[Tuple[int, SweepPoint]]
     return out
 
 
+def _batch_cluster_records(pairs: List[Tuple[int, SweepPoint]]
+                           ) -> List[Tuple[int, SweepRecord]]:
+    """The grouped fast path for batch-eligible *clustered* points.
+
+    Partitions every point through the per-worker memos, groups by
+    *partitioned-program-set identity* — the memoized transforms return one
+    tuple per distinct partitioning, so ``id(progs)`` merges the whole
+    ``tcdm_banks x cq_depth x machine`` axis of one partitioning (bank
+    count, channel depth and per-core MachineConfig are runtime properties)
+    into one group — and advances each group through a single
+    :class:`~.batch_cluster.BatchClusterStepper` pass.  The equivalence
+    oracle runs once per distinct env tuple (lockstep points share the
+    per-core env objects; only scalar-delegated outliers re-check).
+    Program sets the batch engine cannot express fall back to per-point
+    event simulation via :func:`run_point`; deadlocked points become
+    ``status="deadlock"`` records carrying the scalar engine's message."""
+    out: List[Tuple[int, SweepRecord]] = []
+    groups: Dict[int, List[Tuple[int, SweepPoint, ClusterConfig]]] = {}
+    progsets: Dict[int, Tuple] = {}
+    for i, pt in pairs:
+        policy = ExecutionPolicy.parse(pt.policy)
+        base = _point_base(pt, policy)
+        detail = _pipeline_policy_detail(pt, policy)
+        if detail is not None:
+            out.append((i, SweepRecord(**base, status="rejected",
+                                       detail=detail)))
+            continue
+        try:
+            progs = _cluster_progs(pt, KERNELS[pt.kernel], policy,
+                                   _lower_tcfg(pt, policy), use_caches=True)
+        except ValueError as e:
+            out.append((i, SweepRecord(**base, status="rejected",
+                                       detail=str(e))))
+            continue
+        gid = id(progs)
+        progsets[gid] = progs
+        groups.setdefault(gid, []).append((i, pt, _ccfg_for(pt,
+                                                            _mcfg_for(pt))))
+    for gid, items in groups.items():
+        progs = progsets[gid]
+        try:
+            results = BatchClusterStepper(
+                progs, [c for _, _, c in items]).run()
+        except BatchClusterUnsupported:
+            out.extend((i, run_point(pt)) for i, pt, _ in items)
+            continue
+        equiv_memo: Dict[Tuple[int, ...], bool] = {}
+        for (i, pt, _ccfg), res in zip(items, results):
+            policy = ExecutionPolicy.parse(pt.policy)
+            base = _point_base(pt, policy)
+            if isinstance(res, BatchClusterDeadlock):
+                out.append((i, SweepRecord(**base, status="deadlock",
+                                           detail=res.message)))
+                continue
+            dfg = KERNELS[pt.kernel]
+            ref = _reference_cached(pt.kernel, pt.n_samples)
+            out.append((i, _cluster_ok_record(pt, base, dfg, res, ref,
+                                              equiv_memo)))
+    return out
+
+
 def _run_indexed(pairs: List[Tuple[int, SweepPoint]]
                  ) -> List[Tuple[int, SweepRecord]]:
     """Pool-worker entry: run a batch in partition order, tagging each record
     with its input index so the caller can restore input order.  Batch-
-    eligible points peel off into the grouped fast path; the rest run one
-    at a time."""
-    batched = [(i, pt) for i, pt in pairs if _batch_eligible(pt)]
+    eligible points peel off into the grouped fast paths (single-PE and
+    cluster); the rest run one at a time."""
+    batched = [(i, pt) for i, pt in pairs
+               if _batch_eligible(pt) and not pt.clustered]
+    clustered = [(i, pt) for i, pt in pairs
+                 if _batch_eligible(pt) and pt.clustered]
     rest = [(i, pt) for i, pt in pairs if not _batch_eligible(pt)]
     out = [(i, run_point(pt)) for i, pt in rest]
     if batched:
         out.extend(_batch_records(batched))
+    if clustered:
+        out.extend(_batch_cluster_records(clustered))
     return out
 
 

@@ -1,0 +1,348 @@
+"""Differential tests for the vectorized lockstep *cluster* engine (PR 8).
+
+The contract extends PR 7's single-PE one: :class:`repro.core.
+BatchClusterStepper` (one numpy max-recurrence pass over B cluster configs
+of the same partitioned program set) is **bit-identical** to
+:class:`ClusterStepper` (the scalar event engine, itself bit-identical to
+the per-cycle reference) on every point of fuzzed multi-axis grids —
+per-core cycles, energy, stall breakdown (including the ``*_bank`` /
+``cq_empty`` / ``cq_full`` / ``dma`` causes), FIFO push/pop sequences,
+occupancy highwater, FIFO-discipline violations, the functional
+environment, the cluster aggregates (makespan, energy, channel
+push/pop/violation counts), and deadlock behavior (same message, surfaced
+as :class:`BatchClusterDeadlock` instead of an exception so one wedged
+point cannot take down a batch).
+
+Soundness comes from delegation, and the delegation paths are pinned here
+too: predicted bank conflicts, infeasible channel/DMA geometry, and
+circular cross-core dataflow all silently re-run on the scalar engine and
+must still match it exactly.
+
+Randomized configurations are drawn with ``hypothesis`` when available
+(via tests/_hypothesis_compat.py) and with a seeded stdlib PRNG otherwise,
+so the differential property always runs.
+"""
+import dataclasses
+import itertools
+import os
+import random
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.core import (KERNELS, BatchClusterDeadlock, BatchClusterStepper,
+                        BatchClusterUnsupported, ClusterConfig,
+                        ClusterStepper, DeadlockError, Instr, MachineConfig,
+                        OpKind, Program, SweepPoint, TransformConfig, Unit,
+                        batch_cluster_simulate, batch_cluster_supported,
+                        grid, partition_kernel, partition_pipeline,
+                        run_sweep)
+from repro.core.policy import ExecutionPolicy as P
+
+#: every per-core SimResult facet the engines must agree on
+CORE_FACETS = ("cycles", "energy", "instrs", "stalls", "push_seq",
+               "pop_seq", "max_queue_occupancy", "fifo_violations", "env")
+
+
+def _assert_matches(progs, cfgs):
+    """One batched run vs B scalar event-engine runs, all facets."""
+    assert batch_cluster_supported(progs) is None
+    outs = BatchClusterStepper(progs, cfgs).run()
+    assert len(outs) == len(cfgs)
+    for cfg, got in zip(cfgs, outs):
+        try:
+            ref = ClusterStepper(progs, cfg).run()
+        except DeadlockError as e:
+            assert isinstance(got, BatchClusterDeadlock), \
+                f"scalar deadlocked, batch completed ({cfg})"
+            assert got.message == str(e)
+            assert isinstance(got.error(), DeadlockError)
+            continue
+        assert not isinstance(got, BatchClusterDeadlock), \
+            f"batch deadlocked, scalar completed ({cfg}): {got.message}"
+        for agg in ("cycles", "energy", "cq_pushes", "cq_pops",
+                    "cq_violations"):
+            assert getattr(ref, agg) == getattr(got, agg), (agg, cfg)
+        for rc, rr in zip(got.core_results, ref.core_results):
+            for facet in CORE_FACETS:
+                assert getattr(rr, facet) == getattr(rc, facet), \
+                    (facet, rc.name, cfg)
+
+
+def _work_progs(kernel, n_cores, policy=P.COPIFTV2, n_samples=24, **tk):
+    tcfg = TransformConfig(n_samples=n_samples, queue_depth=4, **tk)
+    return partition_kernel(KERNELS[kernel], policy, tcfg, n_cores)
+
+
+def _pipeline_progs(n_cores=2, n=64, dma_buffers=2):
+    tcfg = TransformConfig(unroll=8, batch=min(32, n), queue_depth=4,
+                           n_samples=n)
+    return partition_pipeline(KERNELS["cluster_matmul"], tcfg, n_cores,
+                              dma_buffers=dma_buffers,
+                              use_prefix_cache=False)
+
+
+def _cluster_axis(n_cores, rng=None):
+    """A multi-axis spread of cluster configs: bank geometries (including
+    the conflict-prone small counts that force scalar delegation), queue
+    geometry stretches, and tight deadlock limits."""
+    cfgs = []
+    for banks, depth, lat in itertools.product((None, 8, 1), (2, 4), (1, 3)):
+        cfgs.append(ClusterConfig(
+            n_cores=n_cores, tcdm_banks=banks,
+            machine=MachineConfig(queue_depth=depth, queue_latency=lat)))
+    cfgs.append(ClusterConfig(
+        n_cores=n_cores, tcdm_banks=2, bank_conflict_penalty=4,
+        machine=MachineConfig(queue_depth=4)))
+    cfgs.append(ClusterConfig(
+        n_cores=n_cores,
+        machine=MachineConfig(queue_depth=1, queue_latency=8,
+                              deadlock_limit=3)))
+    if rng is not None:
+        rng.shuffle(cfgs)
+    return cfgs
+
+
+def _pipeline_axis(n_cores, rng=None):
+    """Channel/DMA geometry spread for pipelined points, including
+    infeasibly tight FIFOs/buffers that must delegate, not diverge."""
+    cfgs = []
+    for cqd, cql, setup in itertools.product((1, 2, 4), (1, 2), (0, 8)):
+        cfgs.append(ClusterConfig(n_cores=n_cores, cq_depth=cqd,
+                                  cq_latency=cql, dma_setup=setup))
+    cfgs.append(ClusterConfig(n_cores=n_cores, tcdm_banks=2, cq_depth=4))
+    cfgs.append(ClusterConfig(n_cores=n_cores, cq_depth=4, dma_buffers=1))
+    if rng is not None:
+        rng.shuffle(cfgs)
+    return cfgs
+
+
+# ---------------------------------------------------------------------------
+# Dense small grids (tier1) + randomized fuzz
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("n_cores", [2, 4])
+def test_batch_cluster_matches_stepper_work_partitioned(n_cores):
+    for kernel in ("poly_lcg", "histf"):
+        progs = _work_progs(kernel, n_cores,
+                            n_samples=24 if n_cores != 4 else 32)
+        _assert_matches(progs, _cluster_axis(n_cores))
+
+
+@pytest.mark.tier1
+def test_batch_cluster_matches_stepper_pipelined():
+    progs = _pipeline_progs(n_cores=2)
+    _assert_matches(progs, _pipeline_axis(2))
+
+
+@pytest.mark.parametrize("n_cores", [4])
+def test_batch_cluster_matches_stepper_pipelined_wide(n_cores):
+    progs = _pipeline_progs(n_cores=n_cores)
+    _assert_matches(progs, _pipeline_axis(n_cores))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_batch_cluster_matches_stepper_random_configs(seed):
+    """Seeded-PRNG differential fuzz across kernels, policies, core counts
+    and the whole cluster-geometry space."""
+    rng = random.Random(seed)
+    for _ in range(4):
+        kernel = rng.choice(("poly_lcg", "dequant_dot", "histf", "expf"))
+        policy = rng.choice(list(P))
+        nc = rng.choice((2, 4))
+        try:
+            progs = _work_progs(
+                kernel, nc, policy=policy,
+                n_samples=rng.choice((16, 32)),
+                unroll=rng.choice((2, 4)))
+        except ValueError:
+            continue                  # infeasible partition: nothing to diff
+        _assert_matches(progs, _cluster_axis(nc, rng)[:8])
+
+
+@given(st.sampled_from(("poly_lcg", "dequant_dot", "histf")),
+       st.sampled_from(list(P)), st.sampled_from((2, 4)),
+       st.sampled_from((None, 8, 2)),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=8, deadline=None)
+def test_batch_cluster_matches_stepper_hypothesis(kernel, policy, n_cores,
+                                                  banks, qlat):
+    """Property form of the differential check (skips without hypothesis)."""
+    try:
+        progs = _work_progs(kernel, n_cores, policy=policy, n_samples=16)
+    except ValueError:
+        return
+    cfg = ClusterConfig(n_cores=n_cores, tcdm_banks=banks,
+                        machine=MachineConfig(queue_latency=qlat))
+    _assert_matches(progs, [cfg])
+
+
+# ---------------------------------------------------------------------------
+# Delegation paths stay sound: contention, deadlock, infeasible geometry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_bank_contention_delegates_with_exact_parity():
+    """Heavy TCDM contention (few banks, long conflict windows) trips the
+    zero-contention oracle; the silent scalar re-run must still match the
+    reference on every facet, bank stalls included."""
+    progs = _work_progs("histf", 4, n_samples=32)
+    cfgs = [ClusterConfig(n_cores=4, tcdm_banks=banks,
+                          bank_conflict_penalty=pen)
+            for banks in (1, 2, 4) for pen in (1, 8)]
+    _assert_matches(progs, cfgs)
+    outs = [o for o in BatchClusterStepper(progs, cfgs).run()
+            if not isinstance(o, BatchClusterDeadlock)]
+    assert any(sum(v for r in o.core_results
+                   for k, v in r.stalls.items() if k.endswith("_bank")) > 0
+               for o in outs)        # the axis actually exercises conflicts
+
+
+@pytest.mark.tier1
+def test_cross_core_cyclic_deadlock_delegates_same_message():
+    """Two cores each popping the channel the other would fill: circular
+    dataflow makes the functional pass incomplete, every config delegates,
+    and the scalar engine's cross-core deadlock annotation comes back
+    verbatim as a BatchClusterDeadlock.  Alarm-guarded: raising beats
+    wedging the suite."""
+    import signal
+
+    def cyclic_core(core, pop_chan, push_chan):
+        magic = f"%cq{pop_chan}"
+        pop = Instr(uid=0, kind=OpKind.CQ_POP, label=f"pop{core}",
+                    srcs=(magic,), dst=f"v@{core}", fn=lambda v: v,
+                    cq=pop_chan)
+        push = Instr(uid=1, kind=OpKind.CQ_PUSH, label=f"push{core}",
+                     srcs=(f"v@{core}",), push_val=f"v@{core}",
+                     cq=push_chan)
+        return Program(name=f"cyclic@core{core}/2", policy=P.COPIFTV2,
+                       mode="dual", streams={Unit.INT: [pop, push]},
+                       n_samples=0, init_env={magic: 0},
+                       base_name="cyclic")
+
+    progs = [cyclic_core(0, pop_chan=0, push_chan=1),
+             cyclic_core(1, pop_chan=1, push_chan=0)]
+    cfgs = [ClusterConfig(n_cores=2,
+                          machine=MachineConfig(deadlock_limit=200)),
+            ClusterConfig(n_cores=2, cq_depth=1,
+                          machine=MachineConfig(deadlock_limit=50))]
+    signal.alarm(60)
+    try:
+        outs = BatchClusterStepper(progs, cfgs).run()
+        for got in outs:
+            assert isinstance(got, BatchClusterDeadlock)
+            assert "cross-core deadlock" in got.message
+        _assert_matches(progs, cfgs)
+    finally:
+        signal.alarm(0)
+
+
+@pytest.mark.tier1
+def test_infeasibly_tight_fifos_delegate_with_parity():
+    """Channel FIFOs / DMA buffers / intra-core queues below the static
+    requirement cannot be expressed in lockstep (pushes would block) —
+    those configs take the scalar path and still match exactly."""
+    progs = _pipeline_progs(n_cores=2, n=32, dma_buffers=1)
+    cfgs = [ClusterConfig(n_cores=2, cq_depth=1, dma_buffers=1,
+                          machine=MachineConfig(queue_depth=d))
+            for d in (1, 2, 4)]
+    _assert_matches(progs, cfgs)
+
+
+# ---------------------------------------------------------------------------
+# API edges
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier1
+def test_batch_cluster_api_edges():
+    progs = _work_progs("poly_lcg", 2)
+    assert BatchClusterStepper(progs, []).run() == []
+    with pytest.raises(ValueError, match="n_cores=4"):
+        BatchClusterStepper(progs, [ClusterConfig(n_cores=4)])
+    with pytest.raises(BatchClusterUnsupported, match="evaluate"):
+        BatchClusterStepper(progs, [
+            ClusterConfig(n_cores=2,
+                          machine=MachineConfig(evaluate=True)),
+            ClusterConfig(n_cores=2,
+                          machine=MachineConfig(evaluate=False))])
+    with pytest.raises(ValueError, match="0 per-core programs"):
+        BatchClusterStepper([], [])
+    assert batch_cluster_supported(progs) is None
+    # None config slots default to the degenerate geometry, like the scalar
+    # constructor
+    outs = batch_cluster_simulate(progs, [None])
+    ref = ClusterStepper(progs, ClusterConfig(n_cores=2)).run()
+    assert (outs[0].cycles, outs[0].energy) == (ref.cycles, ref.energy)
+
+
+@pytest.mark.tier1
+def test_batch_cluster_compile_cache_reused_across_steppers():
+    """The compiled tables hang off the program set (keyed by identity +
+    evaluate mode), so repeated sweep groups over the same memoized
+    partitioning skip recompilation."""
+    progs = _work_progs("poly_lcg", 2)
+    s1 = BatchClusterStepper(progs, [ClusterConfig(n_cores=2)])
+    s2 = BatchClusterStepper(progs, [ClusterConfig(
+        n_cores=2, machine=MachineConfig(queue_latency=3))])
+    assert s1._t is s2._t
+    assert s1.run()[0].cycles == ClusterStepper(
+        progs, ClusterConfig(n_cores=2)).run().cycles
+
+
+# ---------------------------------------------------------------------------
+# Sweep integration: mixed grids through run_sweep (satellite 4)
+# ---------------------------------------------------------------------------
+
+def _strip_engine(rec):
+    d = dataclasses.asdict(rec)
+    d.pop("engine")
+    return d
+
+
+@pytest.mark.tier1
+def test_sweep_batch_matches_event_on_interleaved_mixed_grid():
+    """The wired sweep path over a grid interleaving non-clustered,
+    work-partitioned, banked, pipelined and rejected points: engine="batch"
+    records are bit-identical to the all-event sweep (the grouping +
+    fallback regression the satellite asks for)."""
+    pts_e = grid(kernels=("poly_lcg", "histf"),
+                 policies=(P.COPIFT, P.COPIFTV2),
+                 queue_depths=(2, 4), queue_latencies=(1, 4),
+                 n_cores=(1, 2), tcdm_banks=(None, 8), n_samples=16)
+    pts_e += grid(kernels=("cluster_matmul",), policies=(P.COPIFTV2,),
+                  queue_depths=(4,), queue_latencies=(1, 2),
+                  n_cores=(2,), pipelines=(True,), cq_depths=(2, 4),
+                  n_samples=64, unrolls=(8,))
+    # pipelined points on the wrong policy/core-count are rejections the
+    # batch path must reproduce, not crash on
+    pts_e += [SweepPoint(kernel="expf", policy="copift", n_samples=16,
+                         pipeline=True, n_cores=2),
+              SweepPoint(kernel="expf", policy="copiftv2", n_samples=16,
+                         pipeline=True, n_cores=3)]
+    pts_b = [dataclasses.replace(p, engine="batch") for p in pts_e]
+    recs_e = run_sweep(pts_e, workers=1)
+    recs_b = run_sweep(pts_b, workers=1)
+    assert len(recs_e) == len(recs_b) == len(pts_e)
+    assert any(r.n_cores > 1 and r.ok for r in recs_b)
+    assert any(r.pipeline and r.ok for r in recs_b)
+    assert any(r.status == "rejected" for r in recs_b)
+    for a, b in zip(recs_e, recs_b):
+        assert b.engine == "batch"
+        assert _strip_engine(a) == _strip_engine(b)
+
+
+@pytest.mark.tier1
+def test_sweep_batch_cluster_tight_geometry_point_matches_event():
+    """A clustered point with the tightest queue geometry (the regime where
+    lockstep infeasibility and deadlocks live) must come back as the same
+    record under both engines, whatever its status ends up being."""
+    pt = SweepPoint(kernel="histf", policy="copiftv2", n_samples=16,
+                    n_cores=2, queue_depth=1, queue_latency=8,
+                    engine="batch")
+    recs_b = run_sweep([pt], workers=1)
+    recs_e = run_sweep([dataclasses.replace(pt, engine="event")], workers=1)
+    assert _strip_engine(recs_b[0]) == _strip_engine(recs_e[0])

@@ -193,7 +193,8 @@ def _strip_engine(rec):
 def test_sweep_batch_engine_matches_event_engine_records():
     """The wired sweep path: identical records (minus the engine column) for
     engine="batch" vs engine="event", including asymmetric geometries and a
-    clustered point (which falls back to the event engine)."""
+    clustered point (routed through the lockstep cluster engine since PR 8;
+    tests/test_batch_cluster.py pins that contract in depth)."""
     pts_e = grid(kernels=("expf", "histf"),
                  policies=(P.COPIFT, P.COPIFTV2),
                  queue_depths=(1, 4), queue_latencies=(1, 8),

@@ -363,6 +363,34 @@ def test_policy_table_resolution_order(tmp_calibration):
     assert got.source == "override" and got.queue_depth == 16
 
 
+@pytest.mark.tier1
+def test_resolve_through_workload_queue_latency_class(tmp_calibration):
+    """Schema-v4 consumers: a workload whose fabric pins the queue-latency
+    class gets that class's per-latency selection, with the global point as
+    fallback for classes the calibration never swept."""
+    from repro.core.policy import WORKLOAD_QUEUE_LATENCIES
+    calibrate(kernels=["dequant_dot"],
+              grid_kw=dict(queue_depths=(1, 2, 4), queue_latencies=(1, 2),
+                           unrolls=(4, 8), n_samples=16), workers=1)
+    clear_policy_table_cache()
+    table = default_table()
+    rec = load_artifact(artifact_path("dequant_dot"))
+    assert set(rec.selected_by_latency) == {"1", "2"}
+    # train streams through the shared-TCDM interconnect: latency class 2,
+    # so its resolution is the class-2 selection, not the global winner
+    assert WORKLOAD_QUEUE_LATENCIES["train"] == 2
+    got = table.resolve("train")
+    assert got.source == "calibrated"
+    assert got == rec.operating_point_for(2) and got.queue_latency == 2
+    # an explicit class pin beats the workload's table entry
+    assert table.resolve("train", queue_latency=1) == \
+        rec.operating_point_for(1)
+    # a class the calibration never swept falls back to the global point
+    assert table.resolve("train", queue_latency=7) == rec.operating_point()
+    # field overrides still apply on top of the class selection
+    assert table.resolve("train", queue_depth=16).queue_depth == 16
+
+
 # ---------------------------------------------------------------------------
 # benchmarks.run smoke: per-section summary + non-zero exit on failure
 # ---------------------------------------------------------------------------

@@ -359,6 +359,7 @@ def test_benchmarks_run_smoke():
     assert "claims_peak_ipc_v2" in res.stdout
     assert "sweep_perf_speedup_event_cached" in res.stdout
     assert "sweep_scale_speedup_cached" in res.stdout
+    assert "cluster_sweep_scale_speedup_cached" in res.stdout
     assert "calibration_expf_ipc_gain" in res.stdout
     assert "cluster_headline_speedup_4c" in res.stdout
     assert "cluster_pipeline_cluster_matmul_x4_ipc_ratio" in res.stdout
@@ -366,7 +367,7 @@ def test_benchmarks_run_smoke():
     # per-section pass/fail summary: every section reports, none failed
     assert "# --- summary ---" in res.stdout
     assert "# FAIL" not in res.stdout
-    assert res.stdout.count("# PASS:") == 8
+    assert res.stdout.count("# PASS:") == 9
 
 
 # ---------------------------------------------------------------------------
