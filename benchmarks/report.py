@@ -30,7 +30,8 @@ def render() -> str:
     L = [MARKER, "", "Regenerate with `python -m benchmarks.report`.", ""]
     L += ["### Roofline — optimized (current code), analysis variant, 256 chips",
           "",
-          "| arch | shape | t_compute | t_memory | t_collective | bound | useful | MFU | step vs baseline |",
+          "| arch | shape | t_compute | t_memory | t_collective | bound "
+          "| useful | MFU | step vs baseline |",
           "|---|---|---|---|---|---|---|---|---|"]
     for (arch, shape), a in sorted(opt.items()):
         r = a["roofline"]
@@ -58,7 +59,8 @@ def render() -> str:
           "real leaf shardings; v5e HBM = 16 GB.  (XLA:CPU `memory_analysis`",
           "logical-buffer bytes are also recorded in the artifacts but do not",
           "map 1:1 to per-device TPU HBM.)", "",
-          "| arch | shape | state GB @256 | state GB @512 | collective GB/dev @256 (AR/AG/RS/A2A/CP) |",
+          "| arch | shape | state GB @256 | state GB @512 "
+          "| collective GB/dev @256 (AR/AG/RS/A2A/CP) |",
           "|---|---|---|---|---|"]
     for (arch, shape), a in sorted(dep.items()):
         g = a.get("analytic_device_gb", {}).get("total_gb", float("nan"))

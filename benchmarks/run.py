@@ -44,7 +44,7 @@ def main(argv=None) -> None:
     if args.smoke:
         from . import (calibration, cluster_pipeline, cluster_scaling,
                        cluster_sweep_scale, dse, fig3, front_diff,
-                       sweep_perf, sweep_scale)
+                       serve_slo, sweep_perf, sweep_scale)
         _run_sections([
             ("fig3 smoke (machine model, small n)", fig3.smoke),
             ("dse smoke (tiny sweep grid + equivalence fuzz)", dse.smoke),
@@ -62,13 +62,15 @@ def main(argv=None) -> None:
              "partition on a bank-starved TCDM)", cluster_pipeline.smoke),
             ("front diff (committed Pareto-front drift gate)",
              front_diff.smoke),
+            ("serve SLO smoke (continuous vs wave batching under "
+             "trace-driven load)", serve_slo.smoke),
         ])
         return
 
     from . import (calibration, cluster_pipeline, cluster_scaling,
                    cluster_sweep_scale, collective_policy, dse, fig3,
-                   front_diff, kernel_bench, roofline_table, sweep_perf,
-                   sweep_scale)
+                   front_diff, kernel_bench, roofline_table, serve_slo,
+                   sweep_perf, sweep_scale)
     _run_sections([
         ("fig3 (paper Fig.3a/b/c via the machine model)", fig3.main),
         ("dse (design-space sweep + Pareto fronts)", dse.main),
@@ -85,6 +87,8 @@ def main(argv=None) -> None:
         ("cluster pipeline (producer/consumer pairs vs work partition)",
          cluster_pipeline.main),
         ("front diff (committed Pareto-front drift gate)", front_diff.main),
+        ("serve SLO (continuous vs wave batching under trace-driven load)",
+         serve_slo.main),
         ("kernels (interpret-mode micro-bench)", kernel_bench.main),
         ("collective policy (bulk vs ring)", collective_policy.main),
         ("roofline (from dry-run artifacts)", roofline_table.main),

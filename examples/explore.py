@@ -75,13 +75,19 @@ Calibration (the calibrate → consume flow)
     PYTHONPATH=src python examples/explore.py calibrate \
         --objective energy-bounded-ipc --energy-budget 20000 \
         --kernels expf,dequant_dot --out-dir artifacts/calibration
+    PYTHONPATH=src python examples/explore.py calibrate \
+        --objective serve-slo --slo-p99 250 --kernels expf
 
 ``calibrate`` runs the same sweep, reduces it to per-kernel Pareto fronts,
 selects one operating point per kernel under ``--objective`` (``max-ipc``,
-``min-energy`` or ``energy-bounded-ipc`` with ``--energy-budget``), and
+``min-energy``, ``energy-bounded-ipc`` with ``--energy-budget``, or
+``serve-slo`` — max throughput s.t. estimated p99 ≤ ``--slo-p99``
+cycles/token and J/token ≤ ``--energy-budget``), and
 persists each selection as a versioned, schema-checked JSON artifact
 ``artifacts/calibration/<kernel>.json`` (grid, front, git provenance and
-selection rationale embedded).  Downstream consumers load the artifacts at
+selection rationale embedded; since schema v5 every artifact also carries
+per-traffic-level ``serve-slo`` selections, whatever the global objective).
+Downstream consumers load the artifacts at
 startup through ``repro.core.policy.PolicyTable``:
 
 * ``kernels/queue_matmul`` takes its ring depth / unroll from the
@@ -190,7 +196,14 @@ def calibrate_main(argv) -> int:
                          "per rung, strictly decreasing, ending at 1")
     ap.add_argument("--objective", choices=OBJECTIVES, default="max-ipc")
     ap.add_argument("--energy-budget", type=float, default=None,
-                    help="required for --objective energy-bounded-ipc")
+                    help="required for --objective energy-bounded-ipc; for "
+                         "serve-slo it is the joules-per-token bound")
+    ap.add_argument("--slo-p99", type=float, default=None,
+                    help="serve-slo p99 bound in cycles-equivalent per "
+                         "work-token (default: auto-derived with headroom "
+                         "from the front's best attainable estimate); the "
+                         "per-traffic selections (selected_by_traffic, "
+                         "schema v5) use it too")
     ap.add_argument("--tolerance", type=float, default=0.0,
                     help="dominance tolerance: candidates within this "
                          "relative distance of the best primary axis tie, "
@@ -220,7 +233,8 @@ def calibrate_main(argv) -> int:
     t0 = time.time()
     recs = calibrate(kernels=kernels, objective=args.objective,
                      energy_budget=args.energy_budget,
-                     tolerance=args.tolerance, grid_kw=grid_kw,
+                     tolerance=args.tolerance, slo_p99=args.slo_p99,
+                     grid_kw=grid_kw,
                      workers=args.workers, out_dir=out_dir,
                      strategy=args.strategy, search_kw=search_kw)
     dt = time.time() - t0
@@ -231,7 +245,8 @@ def calibrate_main(argv) -> int:
               f"depth={s['queue_depth']} lat={s['queue_latency']} "
               f"unroll={s['unroll']} (ipc={s['ipc']:.3f}, "
               f"energy={s['energy']:.1f}; front {len(r.front)}; "
-              f"{len(r.selected_by_latency)} latency classes) ==")
+              f"{len(r.selected_by_latency)} latency classes, "
+              f"{len(r.selected_by_traffic)} traffic levels) ==")
         print(f"   {r.rationale}")
     print(f"\ncalibrated {len(recs)} kernels in {dt:.2f}s; wrote "
           f"{out_dir}/<kernel>.json (consumers honour REPRO_CALIBRATION_DIR)")

@@ -186,7 +186,8 @@ _DEFAULT_RC_POLICY = RunConfig.__dataclass_fields__["policy"].default
 def resolve_run_config(rc: RunConfig, workload: str,
                        operating_point: Optional[OperatingPoint] = None,
                        policy_table: Optional[PolicyTable] = None,
-                       queue_latency: Optional[int] = None
+                       queue_latency: Optional[int] = None,
+                       traffic: Optional[str] = None
                        ) -> Tuple[RunConfig, OperatingPoint]:
     """Resolve ``workload``'s operating point once, at startup, and thread
     its policy into the run config.
@@ -200,15 +201,19 @@ def resolve_run_config(rc: RunConfig, workload: str,
     artifact exists.  ``queue_latency`` pins the machine's queue-visibility
     latency class for schema-v4 per-class selections (defaulting to the
     workload's ``WORKLOAD_QUEUE_LATENCIES`` entry, the global selection for
-    classes the calibration never swept)."""
+    classes the calibration never swept).  ``traffic`` pins an offered-load
+    level (:data:`repro.core.policy.TRAFFIC_LEVELS`) for schema-v5
+    per-traffic ``serve-slo`` selections — it wins over the latency class
+    when the artifact carries one for that level."""
     table = policy_table if policy_table is not None else default_table()
     if operating_point is not None:
         op = table.resolve(workload, override=operating_point)
     elif rc.policy is not _DEFAULT_RC_POLICY:
         op = table.resolve(workload, queue_latency=queue_latency,
-                           policy=rc.policy)
+                           traffic=traffic, policy=rc.policy)
     else:
-        op = table.resolve(workload, queue_latency=queue_latency)
+        op = table.resolve(workload, queue_latency=queue_latency,
+                           traffic=traffic)
     return dataclasses.replace(rc, policy=op.policy), op
 
 

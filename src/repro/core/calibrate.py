@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import datetime
 import json
+import math
 import os
 import subprocess
 import types
@@ -42,7 +43,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .pareto import dominates, pareto_by_kernel, pareto_front
-from .policy import ExecutionPolicy, OperatingPoint
+from .policy import TRAFFIC_LEVELS, ExecutionPolicy, OperatingPoint
 from .search import run_search
 from .sweep import SweepRecord, grid
 
@@ -57,9 +58,14 @@ from .sweep import SweepRecord, grid
 #: (``selected_by_latency``) + search-strategy/fidelity provenance — v3
 #: artifacts load as stale (``PolicyTable`` warns and falls back to
 #: defaults) until recalibrated.
-SCHEMA_VERSION = 4
+#: v5: the ``serve-slo`` objective ("max throughput s.t. p99 < X
+#: cycles-equivalent and J/token < Y") + per-traffic-level selections
+#: (``selected_by_traffic``, one per :data:`~repro.core.policy.TRAFFIC_LEVELS`
+#: entry, embedded rationale included) — v4 artifacts load as stale with the
+#: usual fallback warning until recalibrated.
+SCHEMA_VERSION = 5
 
-OBJECTIVES = ("max-ipc", "min-energy", "energy-bounded-ipc")
+OBJECTIVES = ("max-ipc", "min-energy", "energy-bounded-ipc", "serve-slo")
 
 #: the configuration + measured-metric fields persisted per front point
 POINT_FIELDS = (
@@ -70,13 +76,17 @@ POINT_FIELDS = (
 )
 
 ARTIFACT_FIELDS = ("schema_version", "kernel", "objective", "selected",
-                   "selected_by_latency", "front", "grid", "provenance",
-                   "rationale")
+                   "selected_by_latency", "selected_by_traffic", "front",
+                   "grid", "provenance", "rationale")
 
 #: per latency-class entry layout inside ``selected_by_latency``
 LATENCY_CLASS_FIELDS = ("selected", "rationale")
 
-OBJECTIVE_FIELDS = ("name", "energy_budget", "tolerance")
+#: per traffic-level entry layout inside ``selected_by_traffic`` (v5):
+#: ``traffic`` records the level's offered-load fraction at selection time
+TRAFFIC_CLASS_FIELDS = ("selected", "rationale", "traffic")
+
+OBJECTIVE_FIELDS = ("name", "energy_budget", "tolerance", "slo_p99")
 
 _REPO_ROOT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "..", ".."))
@@ -128,16 +138,28 @@ class CalibrationRecord:
     rationale: str
     energy_budget: Optional[float] = None
     tolerance: float = 0.0
+    #: v5: the ``serve-slo`` p99 bound (cycles-equivalent per work-token);
+    #: None for other objectives or when the bound was auto-derived
+    slo_p99: Optional[float] = None
     #: v4: ``str(queue_latency) -> {"selected": point, "rationale": str}`` —
     #: the objective re-applied to each latency class's own Pareto front, so
     #: a consumer whose fabric pins the visibility latency gets the best
     #: point *at that latency* instead of the global winner
     selected_by_latency: Dict[str, Dict[str, Any]] = None  # type: ignore
+    #: v5: ``traffic level -> {"selected": point, "rationale": str,
+    #: "traffic": offered-load fraction}`` — the serve-slo selection applied
+    #: per :data:`~repro.core.policy.TRAFFIC_LEVELS` entry, so the serve
+    #: path picks the best point *for its offered load* (light traffic
+    #: affords the lowest-energy feasible point; near saturation only the
+    #: highest-throughput points hold p99)
+    selected_by_traffic: Dict[str, Dict[str, Any]] = None  # type: ignore
     schema_version: int = SCHEMA_VERSION
 
     def __post_init__(self):
         if self.selected_by_latency is None:
             self.selected_by_latency = {}
+        if self.selected_by_traffic is None:
+            self.selected_by_traffic = {}
 
     def operating_point(self) -> OperatingPoint:
         return _op_from_point(self.selected)
@@ -151,18 +173,34 @@ class CalibrationRecord:
             return self.operating_point()
         return _op_from_point(cls_["selected"])
 
+    def operating_point_for_traffic(
+            self, traffic: str) -> Optional[OperatingPoint]:
+        """The serve-slo operating point for a pinned traffic level, or
+        None when the level was never analysed (the caller then falls back
+        through the latency-class / global selections)."""
+        entry = self.selected_by_traffic.get(traffic)
+        if entry is None:
+            return None
+        return _op_from_point(entry["selected"])
+
     def to_dict(self) -> Dict[str, Any]:
         return {
             "schema_version": self.schema_version,
             "kernel": self.kernel,
             "objective": {"name": self.objective,
                           "energy_budget": self.energy_budget,
-                          "tolerance": self.tolerance},
+                          "tolerance": self.tolerance,
+                          "slo_p99": self.slo_p99},
             "selected": dict(self.selected),
             "selected_by_latency": {
                 lat: {"selected": dict(e["selected"]),
                       "rationale": e["rationale"]}
                 for lat, e in self.selected_by_latency.items()},
+            "selected_by_traffic": {
+                lvl: {"selected": dict(e["selected"]),
+                      "rationale": e["rationale"],
+                      "traffic": e["traffic"]}
+                for lvl, e in self.selected_by_traffic.items()},
             "front": [dict(p) for p in self.front],
             "grid": dict(self.grid),
             "provenance": dict(self.provenance),
@@ -175,8 +213,10 @@ class CalibrationRecord:
         obj = d["objective"]
         return cls(kernel=d["kernel"], objective=obj["name"],
                    energy_budget=obj["energy_budget"],
-                   tolerance=obj["tolerance"], selected=d["selected"],
+                   tolerance=obj["tolerance"], slo_p99=obj["slo_p99"],
+                   selected=d["selected"],
                    selected_by_latency=d["selected_by_latency"],
+                   selected_by_traffic=d["selected_by_traffic"],
                    front=d["front"], grid=d["grid"],
                    provenance=d["provenance"], rationale=d["rationale"],
                    schema_version=d["schema_version"])
@@ -233,6 +273,23 @@ def validate_artifact(d: Dict[str, Any]) -> None:
             raise CalibrationError(
                 f"{where}: selected point has queue_latency "
                 f"{entry['selected']['queue_latency']} != class {lat_val}")
+    if not isinstance(d["selected_by_traffic"], dict):
+        raise CalibrationError("selected_by_traffic must be an object")
+    for lvl, entry in d["selected_by_traffic"].items():
+        where = f"selected_by_traffic[{lvl!r}]"
+        if lvl not in TRAFFIC_LEVELS:
+            raise CalibrationError(
+                f"{where}: unknown traffic level "
+                f"(have {sorted(TRAFFIC_LEVELS)})")
+        _check_exact_fields(entry, TRAFFIC_CLASS_FIELDS, where)
+        _check_exact_fields(entry["selected"], POINT_FIELDS,
+                            f"{where}.selected")
+        ExecutionPolicy.parse(entry["selected"]["policy"])
+        if not isinstance(entry["traffic"], (int, float)) or \
+                not 0.0 < entry["traffic"] < 1.0:
+            raise CalibrationError(
+                f"{where}: traffic must be an offered-load fraction in "
+                f"(0, 1), got {entry['traffic']!r}")
 
 
 # -- objective-aware selection ----------------------------------------------
@@ -250,9 +307,98 @@ def _cheap_hw_key(r: SweepRecord) -> Tuple:
             r.unroll_int or r.unroll, r.policy)
 
 
+#: exponential-tail multiplier for the queueing estimate:
+#: p99 sojourn ~ -ln(0.01) x mean sojourn
+_P99_TAIL = -math.log(0.01)
+#: auto-derived serve-slo bound when none is declared: this multiple of the
+#: best attainable p99 estimate at the traffic level (keeps the per-traffic
+#: selections meaningful for artifacts calibrated under other objectives)
+_DEFAULT_SLO_HEADROOM = 3.0
+
+
+def estimated_p99_sojourn(rec: SweepRecord, offered_load: float) -> float:
+    """Analytic p99 sojourn estimate (cycles per work-token) for a swept
+    point serving a Poisson arrival stream of ``offered_load`` tokens/cycle.
+
+    M/D/1-flavoured: service is near-deterministic (one token's worth of the
+    proxy kernel at a fixed configuration, service rate = the point's
+    measured ``throughput``), so mean sojourn is ``S + rho*S/(2(1-rho))``
+    and the p99 is approximated with an exponential tail
+    (:data:`_P99_TAIL` x mean).  Saturated points (``rho >= 1``) return
+    ``inf`` — the queue grows without bound, no SLO holds.
+    """
+    mu = rec.throughput
+    if mu <= 0.0:
+        return math.inf
+    rho = offered_load / mu
+    if rho >= 1.0:
+        return math.inf
+    service = 1.0 / mu
+    mean_sojourn = service + rho * service / (2.0 * (1.0 - rho))
+    return _P99_TAIL * mean_sojourn
+
+
+def _select_serve_slo(cands: Sequence[SweepRecord], traffic: float,
+                      slo_p99: Optional[float],
+                      energy_budget: Optional[float],
+                      tolerance: float) -> Tuple[SweepRecord, str]:
+    """The ``serve-slo`` discipline: max throughput s.t. the estimated p99
+    sojourn fits ``slo_p99`` (cycles-equivalent per work-token) and
+    joules-per-token fits ``energy_budget``.  ``traffic`` is the offered
+    load as a fraction of the front's best service rate.  An infeasible SLO
+    degrades to the closest-to-feasible point (min estimated p99) and the
+    rationale says so.
+    """
+    served = [r for r in cands if r.throughput > 0]
+    if not served:
+        raise CalibrationError(
+            "serve-slo: no front point has positive throughput")
+    lam = traffic * max(r.throughput for r in served)
+    est = {id(r): estimated_p99_sojourn(r, lam) for r in served}
+    auto = ""
+    if slo_p99 is None:
+        best_est = min(est.values())
+        slo_p99 = _DEFAULT_SLO_HEADROOM * best_est
+        auto = (f" (auto bound: {_DEFAULT_SLO_HEADROOM:g}x best attainable "
+                f"{best_est:.1f})")
+
+    def jpt(r: SweepRecord) -> float:
+        return r.energy / max(r.n_samples, 1)
+
+    feasible = [r for r in served if est[id(r)] <= slo_p99
+                and (energy_budget is None or jpt(r) <= energy_budget)]
+    bounds = f"p99<={slo_p99:g}cyc/tok{auto}"
+    if energy_budget is not None:
+        bounds += f", J/tok<={energy_budget:g}"
+    if feasible:
+        best = max(r.throughput for r in feasible)
+        tied = [r for r in feasible if r.throughput >= best * (1.0 - tolerance)]
+        pick = min(tied, key=lambda r: (est[id(r)], r.energy)
+                   + _cheap_hw_key(r))
+        how = (f"serve-slo(load={traffic:g}, {bounds}): "
+               f"throughput={pick.throughput:.4f} tok/cyc "
+               f"(front best {best:.4f}), est p99={est[id(pick)]:.1f}, "
+               f"J/tok={jpt(pick):.1f}; {len(feasible)} of {len(served)} "
+               f"points feasible ({len(tied)} within tolerance "
+               f"{tolerance:g})")
+    else:
+        pick = min(served, key=lambda r: (est[id(r)], -r.throughput)
+                   + _cheap_hw_key(r))
+        how = (f"serve-slo(load={traffic:g}, {bounds}): INFEASIBLE — no "
+               f"point meets the bounds (best attainable est "
+               f"p99={est[id(pick)]:.1f}, J/tok={jpt(pick):.1f}); degraded "
+               f"to the closest point, throughput={pick.throughput:.4f}")
+    rationale = (f"{how}; picked {pick.policy} depth={pick.queue_depth} "
+                 f"lat={pick.queue_latency} unroll={pick.unroll} "
+                 f"cores={pick.n_cores}")
+    return pick, rationale
+
+
 def select_operating_point(front: Sequence[SweepRecord], objective: str,
                            energy_budget: Optional[float] = None,
-                           tolerance: float = 0.0
+                           tolerance: float = 0.0,
+                           slo_p99: Optional[float] = None,
+                           traffic: Optional[float] = None
                            ) -> Tuple[SweepRecord, str]:
     """Pick one front member under ``objective``; returns ``(record,
     rationale)``.
@@ -262,7 +408,12 @@ def select_operating_point(front: Sequence[SweepRecord], objective: str,
     is broken on the secondary axis (then on :func:`_cheap_hw_key`).
     ``energy-bounded-ipc`` maximizes IPC subject to ``energy <=
     energy_budget``; an infeasible budget degrades to ``min-energy`` and the
-    rationale says so.
+    rationale says so.  ``serve-slo`` maximizes throughput subject to an
+    estimated p99 sojourn bound (``slo_p99``, cycles-equivalent per token —
+    auto-derived with headroom when omitted) and a joules-per-token bound
+    (``energy_budget``) at an offered load of ``traffic`` (fraction of the
+    front's best service rate, default the "medium"
+    :data:`~repro.core.policy.TRAFFIC_LEVELS` entry).
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r} "
@@ -271,6 +422,11 @@ def select_operating_point(front: Sequence[SweepRecord], objective: str,
     if not cands:
         raise CalibrationError("cannot select from an empty Pareto front")
     note = ""
+    if objective == "serve-slo":
+        if traffic is None:
+            traffic = TRAFFIC_LEVELS["medium"]
+        return _select_serve_slo(cands, traffic, slo_p99, energy_budget,
+                                 tolerance)
     if objective == "energy-bounded-ipc":
         if energy_budget is None:
             raise ValueError("energy-bounded-ipc requires energy_budget")
@@ -368,7 +524,8 @@ DEFAULT_GRID = dict(queue_depths=(1, 2, 4, 8), queue_latencies=(1, 2),
 
 
 def _select_by_latency(records: List[SweepRecord], objective: str,
-                       energy_budget: Optional[float], tolerance: float
+                       energy_budget: Optional[float], tolerance: float,
+                       slo_p99: Optional[float] = None
                        ) -> Dict[str, Dict[str, Any]]:
     """The v4 per-class selections: re-apply the objective to each queue-
     latency class's own Pareto front (a class whose front is empty — every
@@ -384,9 +541,36 @@ def _select_by_latency(records: List[SweepRecord], objective: str,
             continue
         pick, rationale = select_operating_point(
             front, objective, energy_budget=energy_budget,
-            tolerance=tolerance)
+            tolerance=tolerance, slo_p99=slo_p99)
         out[str(lat)] = {"selected": point_to_dict(pick),
                          "rationale": f"latency class {lat}: {rationale}"}
+    return out
+
+
+def _select_by_traffic(records: List[SweepRecord],
+                       energy_budget: Optional[float], tolerance: float,
+                       slo_p99: Optional[float]
+                       ) -> Dict[str, Dict[str, Any]]:
+    """The v5 per-traffic-level selections: the ``serve-slo`` discipline
+    applied to the kernel's front at every :data:`TRAFFIC_LEVELS` offered
+    load — computed for *every* calibration (whatever its global objective),
+    so the serve path can always resolve a point for its traffic level.  The
+    energy budget is treated as a per-token bound here (serve-slo
+    semantics), independent of how the global objective interprets it."""
+    ok = [r for r in records if r.ok]
+    front = pareto_front(ok) if ok else []
+    out: Dict[str, Dict[str, Any]] = {}
+    if not front:
+        return out
+    for level, util in TRAFFIC_LEVELS.items():
+        try:
+            pick, rationale = _select_serve_slo(
+                front, util, slo_p99, energy_budget, tolerance)
+        except CalibrationError:
+            continue
+        out[level] = {"selected": point_to_dict(pick),
+                      "rationale": f"traffic {level}: {rationale}",
+                      "traffic": util}
     return out
 
 
@@ -394,6 +578,7 @@ def calibrate(kernels: Optional[Sequence[str]] = None,
               objective: str = "max-ipc",
               energy_budget: Optional[float] = None,
               tolerance: float = 0.0,
+              slo_p99: Optional[float] = None,
               grid_kw: Optional[Dict[str, Any]] = None,
               workers: Optional[int] = None,
               out_dir: Optional[str] = None,
@@ -417,7 +602,10 @@ def calibrate(kernels: Optional[Sequence[str]] = None,
     pruned calibration from an exhaustive one.  Besides the global
     selection, each artifact carries per queue-latency-class selections
     (``selected_by_latency``, v4): the objective re-applied to each latency
-    class's own front.
+    class's own front; and per-traffic-level ``serve-slo`` selections
+    (``selected_by_traffic``, v5) — always computed, whatever the global
+    objective, with ``slo_p99`` as the p99 bound (auto-derived with headroom
+    when omitted) and ``energy_budget`` read as a joules-per-token bound.
     """
     gk = dict(DEFAULT_GRID)
     gk.update(grid_kw or {})
@@ -453,13 +641,17 @@ def calibrate(kernels: Optional[Sequence[str]] = None,
     for kernel, front in pareto_by_kernel(records).items():
         pick, rationale = select_operating_point(
             front, objective, energy_budget=energy_budget,
-            tolerance=tolerance)
+            tolerance=tolerance, slo_p99=slo_p99)
         rec = CalibrationRecord(
             kernel=kernel, objective=objective, energy_budget=energy_budget,
-            tolerance=tolerance, selected=point_to_dict(pick),
+            tolerance=tolerance, slo_p99=slo_p99,
+            selected=point_to_dict(pick),
             selected_by_latency=_select_by_latency(
                 by_kernel.get(kernel, []), objective, energy_budget,
-                tolerance),
+                tolerance, slo_p99=slo_p99),
+            selected_by_traffic=_select_by_traffic(
+                by_kernel.get(kernel, []), energy_budget, tolerance,
+                slo_p99),
             front=[point_to_dict(r) for r in front], grid=grid_desc,
             provenance=provenance, rationale=rationale)
         validate_artifact(rec.to_dict())     # never persist a bad artifact

@@ -118,6 +118,23 @@ WORKLOAD_QUEUE_LATENCIES: Dict[str, int] = {
     "train": 2,
 }
 
+#: Serve-path traffic levels: offered load as a fraction of the best
+#: sustainable service rate on the calibrated Pareto front.  The schema-v5
+#: calibration artifacts carry one ``serve-slo`` selection per level
+#: (``selected_by_traffic``): max throughput subject to the estimated-p99
+#: and joules-per-token bounds *at that offered load* — queueing delay
+#: grows with load, so the feasible set shrinks as traffic rises and the
+#: levels select different points on fronts where cheap-but-slow
+#: configurations only hold the SLO when the queue stays short.
+#: :meth:`PolicyTable.resolve` takes a ``traffic=`` level and falls back to
+#: the latency-class/global selection when the artifact predates v5 or
+#: never analysed that level.
+TRAFFIC_LEVELS: Dict[str, float] = {
+    "low": 0.3,
+    "medium": 0.6,
+    "high": 0.85,
+}
+
 
 class PolicyTable:
     """Workload → :class:`OperatingPoint` resolution, calibration-backed.
@@ -128,11 +145,14 @@ class PolicyTable:
        unconditionally, tagged ``source="override"``;
     2. a calibrated entry for the workload itself, then for its
        :data:`WORKLOAD_PROXIES` proxy kernel — tagged ``"calibrated"``.
-       When the workload pins a queue-latency class (an explicit
-       ``queue_latency=`` argument, or its :data:`WORKLOAD_QUEUE_LATENCIES`
-       entry) and the artifact carries a schema-v4 per-class selection for
-       it, that class's point is returned; the global selection is the
-       fallback for classes the calibration never swept;
+       When a ``traffic=`` level is pinned and the artifact carries a
+       schema-v5 per-traffic ``serve-slo`` selection for it, that level's
+       point wins; otherwise, when the workload pins a queue-latency class
+       (an explicit ``queue_latency=`` argument, or its
+       :data:`WORKLOAD_QUEUE_LATENCIES` entry) and the artifact carries a
+       schema-v4 per-class selection for it, that class's point is
+       returned; the global selection is the fallback for classes/levels
+       the calibration never analysed;
     3. the :class:`OperatingPoint` defaults — tagged ``"default"``.
     """
 
@@ -178,6 +198,7 @@ class PolicyTable:
     def resolve(self, workload: str,
                 override: Optional[OperatingPoint] = None,
                 queue_latency: Optional[int] = None,
+                traffic: Optional[str] = None,
                 **field_overrides) -> OperatingPoint:
         if override is not None:
             return dataclasses.replace(override, source="override")
@@ -185,11 +206,23 @@ class PolicyTable:
             WORKLOAD_PROXIES.get(workload)
         point = self.entries.get(key) if key is not None else None
         if point is not None:
-            if queue_latency is None:
-                queue_latency = WORKLOAD_QUEUE_LATENCIES.get(workload)
             rec = self.records.get(key)
-            if rec is not None and queue_latency is not None:
-                point = rec.operating_point_for(queue_latency)  # type: ignore[attr-defined]
+            traffic_point = None
+            if rec is not None and traffic is not None:
+                # schema-v5 per-traffic serve-slo selection; getattr keeps
+                # pre-v5 CalibrationRecord objects (and stale-fallback
+                # loads) working — they simply lack the accessor
+                for_traffic = getattr(rec, "operating_point_for_traffic",
+                                      None)
+                if for_traffic is not None:
+                    traffic_point = for_traffic(traffic)
+            if traffic_point is not None:
+                point = traffic_point
+            else:
+                if queue_latency is None:
+                    queue_latency = WORKLOAD_QUEUE_LATENCIES.get(workload)
+                if rec is not None and queue_latency is not None:
+                    point = rec.operating_point_for(queue_latency)  # type: ignore[attr-defined]
         if point is None:
             point = OperatingPoint()
         if field_overrides:

@@ -114,7 +114,7 @@ def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Pytree:
 def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Pytree:
     from ..models.ssm import ssm_dims
     b = _batch_axes(mesh, shape.global_batch)
-    out: Dict[str, Any] = {"len": P()}
+    out: Dict[str, Any] = {"len": P(b)}   # per-sequence positions: (B,)
     if cfg.family == "ssm":
         d_in, _, _ = ssm_dims(cfg)
         out["ssm"] = P(None, b, _model_axis(mesh, d_in), None)

@@ -1,7 +1,7 @@
 """Serving launcher: batched decode over the continuous-batching engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \\
-      --requests 6 --max-new 12
+      --requests 6 --max-new 12 --traffic high
 """
 import argparse
 import time
@@ -10,6 +10,7 @@ import jax
 
 from ..config import RunConfig
 from ..configs import ARCHS, get_config, get_reduced
+from ..core.policy import TRAFFIC_LEVELS
 from ..models import init_model_params
 from ..serve import ServeEngine
 
@@ -23,6 +24,16 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=None,
                     help="decode batch slots (default: 4 per cluster core "
                          "of the calibrated 'serve' operating point)")
+    ap.add_argument("--mode", choices=("continuous", "static"),
+                    default="continuous",
+                    help="slot refill discipline: continuous (refill per "
+                         "step as sequences finish) or static (wave "
+                         "batching, the measurable baseline)")
+    ap.add_argument("--traffic", choices=sorted(TRAFFIC_LEVELS),
+                    default=None,
+                    help="offered-load level: selects the calibration "
+                         "artifact's per-traffic serve-slo operating point "
+                         "(schema v5) when one exists")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -31,10 +42,12 @@ def main() -> None:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
     rc = RunConfig(dtype="float32", param_dtype="float32", remat=False)
     params = init_model_params(jax.random.PRNGKey(args.seed), cfg)
-    eng = ServeEngine(params, cfg, rc, batch_slots=args.slots, max_len=256)
+    eng = ServeEngine(params, cfg, rc, batch_slots=args.slots, max_len=256,
+                      mode=args.mode, traffic=args.traffic)
     op = eng.operating_point
     print(f"policy={op.policy.value} (source={op.source}, "
-          f"cores={op.n_cores}, slots={len(eng.slots)})")
+          f"cores={op.n_cores}, slots={len(eng.slots)}, mode={args.mode}"
+          + (f", traffic={args.traffic}" if args.traffic else "") + ")")
 
     rng = jax.random.PRNGKey(args.seed + 1)
     rids = []
@@ -51,6 +64,12 @@ def main() -> None:
     total_tokens = sum(len(r.generated) for r in done.values())
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s)")
+    rep = eng.metrics()
+    print(f"calibrated accounting ({rep.cost_source}): "
+          f"{rep.throughput:.5f} tok/cycle, "
+          f"{rep.energy_per_token:.1f} J-equiv/token, "
+          f"p50/p99 latency {rep.p50_latency:.1f}/{rep.p99_latency:.1f} "
+          f"cyc/tok, p50 TTFT {rep.p50_ttft:.0f} cyc")
     for rid, prompt in rids:
         r = done[rid]
         print(f"  req{rid}: prompt={prompt} -> {r.generated}")

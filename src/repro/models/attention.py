@@ -113,7 +113,8 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                 # the Pallas kernel skips these via its grid/masking too
                 if causal and ki * block_k > q_offset + (qi + 1) * block_q - 1:
                     continue
-                if window is not None and (ki + 1) * block_k - 1                         <= q_offset + qi * block_q - window:
+                if (window is not None and (ki + 1) * block_k - 1
+                        <= q_offset + qi * block_q - window):
                     continue
                 carry, _ = kv_step(carry, ki)
             m, l, acc = carry
@@ -137,7 +138,8 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          length: jax.Array, *, window: Optional[int] = None
                          ) -> jax.Array:
     """Single-token attention: q (B, Hq, 1, D); caches (B, Hkv, T, D).
-    ``length`` (scalar int32) = number of valid cache entries."""
+    ``length`` (scalar int32, or per-sequence (B,) int32 for continuous
+    batching) = number of valid cache entries per sequence."""
     B, Hq, _, D = q.shape
     _, Hkv, T, Dv = v_cache.shape
     G = Hq // Hkv
@@ -146,9 +148,10 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale
     pos = jnp.arange(T)
-    mask = pos[None] < length
+    lv = jnp.reshape(jnp.asarray(length), (-1, 1))   # (B, 1) or (1, 1)
+    mask = pos[None] < lv
     if window is not None:
-        mask = mask & (pos[None] >= length - window)
+        mask = mask & (pos[None] >= lv - window)
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgt,bhtd->bhgd", p, v_cache.astype(jnp.float32))
@@ -211,21 +214,22 @@ def gqa_prefill_kv(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Ar
 def gqa_decode(p, x: jax.Array, cfg: ModelConfig, k_cache, v_cache,
                length: jax.Array, *, window: Optional[int] = None):
     """One-token step.  x: (B, 1, d); caches (B, Hkv, T, hd).
+    ``length`` is scalar or per-sequence (B,) — continuous batching admits
+    requests mid-run, so every sequence carries its own position.
     Returns (out (B,1,d), new_k_cache, new_v_cache)."""
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (x.shape[0],))
     q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
     if cfg.rope:
-        cos, sin = rope_angles(length[None], cfg.resolved_head_dim,
-                               cfg.rope_theta)
-        q = apply_rope(q, cos[None, None], sin[None, None])
-        k = apply_rope(k, cos[None, None], sin[None, None])
+        cos, sin = rope_angles(length, cfg.resolved_head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos[:, None, None], sin[:, None, None])
+        k = apply_rope(k, cos[:, None, None], sin[:, None, None])
     T = k_cache.shape[2]
     slot = length % T                      # ring for windowed layers
-    k_cache = jax.lax.dynamic_update_slice(
-        k_cache, k.astype(k_cache.dtype), (0, 0, slot, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        v_cache, v.astype(v_cache.dtype), (0, 0, slot, 0))
+    upd = lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (0, s, 0))
+    k_cache = jax.vmap(upd)(k_cache, k.astype(k_cache.dtype), slot)
+    v_cache = jax.vmap(upd)(v_cache, v.astype(v_cache.dtype), slot)
     if window is None:
         o = decode_attention_ref(q, k_cache, v_cache, length + 1)
     else:
@@ -302,22 +306,25 @@ def mla_apply(p, x: jax.Array, cfg: ModelConfig, *, q_offset: int = 0,
 def mla_decode(p, x: jax.Array, cfg: ModelConfig, latent_cache, rope_cache,
                length: jax.Array):
     """Absorbed MLA decode: the cache holds only (latent, k_rope) —
-    (B, T, r) and (B, T, rope_dim).  Score = q_nope·W_uk·latent + q_rope·k_rope."""
+    (B, T, r) and (B, T, rope_dim).  ``length`` is scalar or per-sequence
+    (B,).  Score = q_nope·W_uk·latent + q_rope·k_rope."""
     m = cfg.mla
-    cos, sin = rope_angles(length[None], m.qk_rope_head_dim, cfg.rope_theta)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (x.shape[0],))
+    cos, sin = rope_angles(length, m.qk_rope_head_dim, cfg.rope_theta)
     cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
     q = jnp.einsum("bsr,rhk->bhsk", cq, p["wuq"])
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     ckv = x @ p["wdkv"]
     lat_t, k_rope_t = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
     lat_t = rms_norm(lat_t, p["kv_norm"], cfg.norm_eps)
-    q_rope = apply_rope(q_rope, cos[None, None], sin[None, None])
-    k_rope_t = apply_rope(k_rope_t, cos[None], sin[None])
+    q_rope = apply_rope(q_rope, cos[:, None, None], sin[:, None, None])
+    k_rope_t = apply_rope(k_rope_t, cos[:, None], sin[:, None])
 
-    latent_cache = jax.lax.dynamic_update_slice(
-        latent_cache, lat_t.astype(latent_cache.dtype), (0, length, 0))
-    rope_cache = jax.lax.dynamic_update_slice(
-        rope_cache, k_rope_t.astype(rope_cache.dtype), (0, length, 0))
+    upd = lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0))
+    latent_cache = jax.vmap(upd)(latent_cache,
+                                 lat_t.astype(latent_cache.dtype), length)
+    rope_cache = jax.vmap(upd)(rope_cache,
+                               k_rope_t.astype(rope_cache.dtype), length)
 
     # absorbed attention
     q_eff = jnp.einsum("bhsk,rhk->bhsr", q_nope, p["wuk"])    # (B,H,1,r)
@@ -327,7 +334,7 @@ def mla_decode(p, x: jax.Array, cfg: ModelConfig, latent_cache, rope_cache,
                       rope_cache.astype(jnp.float32)))
     s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     T = latent_cache.shape[1]
-    mask = jnp.arange(T)[None] <= length
+    mask = jnp.arange(T)[None] <= length[:, None]
     s = jnp.where(mask[:, None, None], s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bhsr", pattn,

@@ -235,7 +235,10 @@ def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
     """Shape tree of the decode cache (also used to allocate zeros)."""
     L, hd = cfg.n_layers, cfg.resolved_head_dim
     sd = lambda shape, dt=dtype: jax.ShapeDtypeStruct(shape, dt)
-    out: Dict[str, Any] = {"len": sd((), jnp.int32)}
+    # ``len`` is per-sequence: continuous batching admits a request into a
+    # freed slot mid-run, so each batch row carries its own position (RoPE
+    # angle, KV write cursor, and attention-mask extent all derive from it)
+    out: Dict[str, Any] = {"len": sd((batch,), jnp.int32)}
     if cfg.family == "ssm":
         d_in, _, d_state = ssm_mod.ssm_dims(cfg)
         K = cfg.ssm.d_conv
@@ -274,7 +277,9 @@ def decode_step(params: Pytree, cache: Pytree, batch: Dict[str, jax.Array],
                 cfg: ModelConfig, rc: RunConfig
                 ) -> Tuple[jax.Array, Pytree]:
     """One token for every sequence in the batch.
-    batch = {"tokens": (B, 1)} -> (logits (B, vocab), new cache)."""
+    batch = {"tokens": (B, 1)} -> (logits (B, vocab), new cache).
+    ``cache["len"]`` is a per-sequence (B,) position vector, so slots of a
+    continuously-batched engine may sit at different sequence lengths."""
     dtype = jnp.dtype(rc.dtype)
     x = params["embed"][batch["tokens"]].astype(dtype)
     length = cache["len"]

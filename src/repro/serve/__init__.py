@@ -1,3 +1,11 @@
-from .engine import ServeEngine
+from .engine import Request, ServeEngine
+from .scheduler import (AdmissionControl, AdmissionError,
+                        ContinuousScheduler, HostDispatch, ServeReport,
+                        ServeSLO, StepCostModel, TraceRequest,
+                        simulate_serve)
 
-__all__ = ["ServeEngine"]
+__all__ = [
+    "AdmissionControl", "AdmissionError", "ContinuousScheduler",
+    "HostDispatch", "Request", "ServeEngine", "ServeReport", "ServeSLO",
+    "StepCostModel", "TraceRequest", "simulate_serve",
+]

@@ -1,13 +1,22 @@
 """Batched serving engine: continuous batching over fixed decode slots.
 
-Requests are admitted into free slots of a fixed-size batch; every engine
-step decodes one token for all active slots (a single jitted decode_step).
-Prompt ingestion reuses the decode path token-by-token (teacher-forcing the
-prompt) — exact and cache-consistent; a production deployment would fuse a
-chunked prefill, which exists as the lowered ``prefill`` cell of the
-dry-run."""
+Requests are admitted through the scheduler's arrival queue (bounded —
+admission control sheds load past ``max_pending`` and refuses shapes that
+cannot fit a slot); every engine step decodes one token for all active slots
+(a single jitted decode_step).  Slots refill *mid-run* the step after they
+drain — the cache tracks a per-sequence position vector (``cache["len"]`` is
+``(B,)``), so one slot's readmission never disturbs its neighbours and never
+resurrects stale KV rows (the freed slot's cache rows are zeroed before
+reuse).  ``mode="static"`` keeps the old wave-batching behaviour as a
+measurable baseline.  Prompt ingestion reuses the decode path token-by-token
+(teacher-forcing the prompt) — exact and cache-consistent; the virtual-time
+``scheduler.simulate_serve`` models the fused chunked prefill a production
+deployment would run.
+"""
 from __future__ import annotations
 
+import copy
+import dataclasses
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Dict, List, Optional
@@ -19,6 +28,8 @@ import numpy as np
 from ..config import ModelConfig, RunConfig, resolve_run_config
 from ..core.policy import OperatingPoint, PolicyTable
 from ..models.model import decode_step, init_cache
+from .scheduler import (AdmissionControl, ContinuousScheduler, HostDispatch,
+                        ServeReport, ServeSLO, StepCostModel, build_report)
 
 Pytree = Any
 
@@ -42,9 +53,11 @@ class ServeEngine:
     :class:`~repro.core.policy.PolicyTable` (``policy_table`` or the
     process-wide default honouring ``REPRO_CALIBRATION_DIR``) supplies the
     ``"serve"`` workload's point, falling back to the paper's defaults when
-    no artifact exists.  The resolved policy is threaded into the engine's
-    :class:`RunConfig` so every kernel the decode path reaches sees it; the
-    resolution itself never touches the per-step hot path.
+    no artifact exists.  A ``traffic`` level ("low"/"medium"/"high") selects
+    the artifact's per-traffic ``serve-slo`` point when the calibration
+    carries one (schema v5).  The resolved policy is threaded into the
+    engine's :class:`RunConfig` so every kernel the decode path reaches sees
+    it; the resolution itself never touches the per-step hot path.
 
     Batch sizing is cluster-aware: with ``batch_slots=None`` the engine
     sizes its decode batch as ``SLOTS_PER_CORE * n_cores`` from the
@@ -52,6 +65,11 @@ class ServeEngine:
     per-core token streams, so the continuous batch scales with the
     calibrated cluster width instead of implicitly assuming one PE.  An
     explicit ``batch_slots`` always wins.
+
+    Request lifecycle and accounting live in
+    :class:`~repro.serve.scheduler.ContinuousScheduler`; :meth:`metrics`
+    turns the recorded timestamps into p50/p99 latency and energy-per-token
+    through the operating point's :class:`StepCostModel`.
     """
 
     #: decode slots the batch allocates per cluster core (one PE's worth of
@@ -62,70 +80,77 @@ class ServeEngine:
                  batch_slots: Optional[int] = None, max_len: int = 256,
                  greedy: bool = True,
                  operating_point: Optional[OperatingPoint] = None,
-                 policy_table: Optional[PolicyTable] = None):
+                 policy_table: Optional[PolicyTable] = None,
+                 mode: str = "continuous", max_pending: int = 64,
+                 traffic: Optional[str] = None,
+                 cost_model: Optional[StepCostModel] = None,
+                 dispatch: Optional[HostDispatch] = None):
         assert cfg.causal, "serving requires an autoregressive model"
         self.params = params
         rc, self.operating_point = resolve_run_config(
-            rc, "serve", operating_point, policy_table)
+            rc, "serve", operating_point, policy_table, traffic=traffic)
         if batch_slots is None:
             batch_slots = self.SLOTS_PER_CORE * max(
                 1, self.operating_point.n_cores)
         self.cfg, self.rc = cfg, rc
-        self.slots: List[Optional[Request]] = [None] * batch_slots
-        self.pending: List[Request] = []
+        self.traffic = traffic
         self.max_len = max_len
         self.greedy = greedy
+        self.sched = ContinuousScheduler(
+            batch_slots, mode=mode,
+            admission=AdmissionControl(max_pending=max_pending,
+                                       max_total_len=max_len))
+        self.requests: Dict[int, Request] = {}
         self.cache = init_cache(cfg, batch_slots, max_len, jnp.dtype(rc.dtype))
-        self._prompt_cursor: Dict[int, int] = {}      # slot -> prompt index
         self._step = jax.jit(partial(decode_step, cfg=cfg, rc=rc))
         self._next_rid = 0
         self.finished: Dict[int, Request] = {}
+        self._cost = cost_model
+        self._dispatch = dispatch
+        self._n_steps = 0
+        self._clock = 0.0       # cycles when a cost model drives it, else steps
+        self._energy = 0.0
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        """Engine-side view of the decode batch: the live :class:`Request`
+        per slot (``None`` for free slots)."""
+        return [self.requests[s.rid] if s is not None else None
+                for s in self.sched.slots]
 
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        """Queue a request; raises
+        :class:`~repro.serve.scheduler.AdmissionError` when admission
+        control sheds it (backpressure — the caller retries later)."""
         rid = self._next_rid
+        self.sched.submit(rid, len(prompt), max_new, now=self._clock)
         self._next_rid += 1
-        self.pending.append(Request(rid, list(prompt), max_new))
+        self.requests[rid] = Request(rid, list(prompt), max_new)
         return rid
 
     def _reset_slot_cache(self, i: int) -> None:
-        """Zero slot ``i``'s rows in every cache leaf (batch is axis 1 of
-        every non-scalar leaf; the joint ``len`` scalar is left alone)."""
-        self.cache = {k: (v if v.ndim == 0 else v.at[:, i].set(0))
+        """Zero slot ``i``'s rows in every cache leaf before reuse: batch is
+        axis 1 of every stacked leaf, axis 0 of the per-sequence ``len``
+        vector.  This is what makes mid-run refill safe — the readmitted
+        slot restarts at position 0 over zeroed KV/state rows while its
+        neighbours keep decoding at their own positions."""
+        self.cache = {k: (v if v.ndim == 0 else
+                          v.at[i].set(0) if v.ndim == 1 else
+                          v.at[:, i].set(0))
                       for k, v in self.cache.items()}
 
-    # Slots are length-tracked jointly (one ``cache["len"]`` scalar), so
-    # this simple engine admits requests in waves: a new wave only starts
-    # once every slot has drained.  At that boundary the whole cache is
-    # re-zeroed (len back to 0) — without it a second wave would attend
-    # over the first wave's stale KV rows at an advanced length and
-    # diverge from a fresh engine.  The per-slot zeroing on admission is
-    # defense in depth for the mid-wave case; per-slot lengths are the
-    # straightforward extension.
-    def _admit(self) -> None:
-        if self.pending and not self._active():
-            self.cache = init_cache(self.cfg, len(self.slots), self.max_len,
-                                    jnp.dtype(self.rc.dtype))
-            self._prompt_cursor.clear()
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.pending:
-                req = self.pending.pop(0)
-                self.slots[i] = req
-                self._reset_slot_cache(i)
-                self._prompt_cursor[i] = 0
-
-    def _active(self) -> bool:
-        return any(s is not None for s in self.slots)
-
     def step(self) -> None:
-        """Advance every active slot by one token."""
-        self._admit()
-        if not self._active():
+        """Advance every active slot by one token, refilling freed slots
+        from the arrival queue first (continuous batching)."""
+        for i, _ in self.sched.refill(self._clock):
+            self._reset_slot_cache(i)
+        active = self.sched.active()
+        if not active:
             return
-        tokens = np.zeros((len(self.slots), 1), np.int32)
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            cur = self._prompt_cursor[i]
+        tokens = np.zeros((self.sched.n_slots, 1), np.int32)
+        for i, sreq in active:
+            req = self.requests[sreq.rid]
+            cur = sreq.prefill_cursor
             if cur < len(req.prompt):
                 tokens[i, 0] = req.prompt[cur]
             elif req.generated:
@@ -135,24 +160,60 @@ class ServeEngine:
         logits, self.cache = self._step(self.params, self.cache,
                                         {"tokens": jnp.asarray(tokens)})
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            cur = self._prompt_cursor[i]
-            if cur < len(req.prompt) - 1:
-                self._prompt_cursor[i] = cur + 1       # still ingesting
-                continue
-            if cur == len(req.prompt) - 1:
-                self._prompt_cursor[i] = cur + 1       # prompt done
+        if self._cost is not None:
+            cycles, joules = self._cost.step_cost(self.sched.n_slots, 0)
+            if self._dispatch is not None:
+                cycles = self._dispatch.step(cycles, self._clock)
+            dt, self._energy = cycles, self._energy + joules
+        else:
+            dt = 1.0                       # steps domain; metrics() converts
+        end = self._clock + dt
+        for i, sreq in active:
+            req = self.requests[sreq.rid]
+            cur = sreq.prefill_cursor
+            if cur < len(req.prompt):
+                self.sched.advance_prefill(sreq.rid, 1, end)
+                if cur < len(req.prompt) - 1:
+                    continue               # still ingesting the prompt
+                # the step that fed the last prompt token emitted the first
+                # generated token — fall through to record it
             req.generated.append(int(nxt[i]))
-            if len(req.generated) >= req.max_new:
+            if self.sched.record_token(sreq.rid, end):
                 req.done = True
                 self.finished[req.rid] = req
-                self.slots[i] = None
+        self._clock = end
+        self._n_steps += 1
 
     def run(self, max_steps: int = 1000) -> Dict[int, Request]:
         steps = 0
-        while (self.pending or self._active()) and steps < max_steps:
+        while self.sched.busy and steps < max_steps:
             self.step()
             steps += 1
         return self.finished
+
+    def metrics(self, slo: Optional[ServeSLO] = None) -> ServeReport:
+        """Per-request serving report (p50/p99 latency, TTFT, J/token,
+        SLO attainment) in cycles-equivalent of the resolved operating
+        point.  Without an explicit ``cost_model`` the conversion builds one
+        lazily from the operating point (timestamps were tracked in engine
+        steps; every step costs the full batch width)."""
+        if self._cost is not None:
+            return build_report(self.sched, self._clock, self._energy,
+                                slo=slo, dispatch=self._dispatch,
+                                cost_source=self._cost.source)
+        cost = StepCostModel.from_operating_point(self.operating_point)
+        cps, eps = cost.step_cost(self.sched.n_slots, 0)
+
+        def conv(t: Optional[float]) -> Optional[float]:
+            return None if t is None else t * cps
+
+        sched = copy.copy(self.sched)
+        sched.requests = {
+            rid: dataclasses.replace(
+                r, arrival=conv(r.arrival), admit_time=conv(r.admit_time),
+                prefill_end=conv(r.prefill_end),
+                first_token=conv(r.first_token), finish=conv(r.finish))
+            for rid, r in self.sched.requests.items()}
+        return build_report(sched, self._n_steps * cps, self._n_steps * eps,
+                            slo=slo, dispatch=self._dispatch,
+                            cost_source=cost.source)

@@ -392,6 +392,116 @@ def test_resolve_through_workload_queue_latency_class(tmp_calibration):
 
 
 # ---------------------------------------------------------------------------
+# serve-slo objective + schema v5 (per-traffic selections)
+# ---------------------------------------------------------------------------
+
+#: synthetic serve-slo front: close enough throughputs that none saturates
+#: at medium load, with the energy/throughput trade inverted (the fastest
+#: point is the hungriest) so the J/token bound is discriminating
+SERVE_FRONT = [
+    _rec(2.0, 160.0, cycles=50, throughput=16 / 50, queue_depth=8),  # 10 J/tok
+    _rec(1.8, 80.0, cycles=60, throughput=16 / 60),                  # 5 J/tok
+    _rec(1.5, 32.0, cycles=80, throughput=16 / 80, queue_depth=1),   # 2 J/tok
+]
+
+
+@pytest.mark.tier1
+def test_estimated_p99_sojourn_is_a_queueing_estimate():
+    from repro.core.calibrate import estimated_p99_sojourn
+    r = SERVE_FRONT[0]
+    light, heavy = (estimated_p99_sojourn(r, 0.1 * r.throughput),
+                    estimated_p99_sojourn(r, 0.9 * r.throughput))
+    assert 0 < light < heavy                     # queueing delay grows
+    assert estimated_p99_sojourn(r, r.throughput) == float("inf")  # rho>=1
+
+
+@pytest.mark.tier1
+def test_serve_slo_selection_max_throughput_under_bounds():
+    # unconstrained enough: the fastest point wins
+    pick, why = select_operating_point(SERVE_FRONT, "serve-slo",
+                                       slo_p99=100.0)
+    assert pick.cycles == 50 and "serve-slo" in why
+    # the J/token budget excludes the hungry fast point
+    pick, why = select_operating_point(SERVE_FRONT, "serve-slo",
+                                       slo_p99=100.0, energy_budget=6.0)
+    assert pick.cycles == 60 and "J/tok" in why
+    # an unmeetable bound degrades to the closest point and says so
+    pick, why = select_operating_point(SERVE_FRONT, "serve-slo",
+                                       slo_p99=10.0)
+    assert pick.cycles == 50 and "INFEASIBLE" in why
+    # no declared bound: the auto headroom keeps the selection meaningful
+    pick, why = select_operating_point(SERVE_FRONT, "serve-slo")
+    assert "auto bound" in why
+
+
+def test_serve_slo_calibration_v5_round_trip(tmp_calibration):
+    from repro.core.policy import TRAFFIC_LEVELS
+    rec = calibrate(kernels=["expf"], objective="serve-slo", slo_p99=400.0,
+                    grid_kw=TINY_GRID, workers=1)["expf"]
+    assert rec.schema_version == SCHEMA_VERSION
+    assert set(rec.selected_by_traffic) == set(TRAFFIC_LEVELS)
+    for lvl, entry in rec.selected_by_traffic.items():
+        assert entry["traffic"] == TRAFFIC_LEVELS[lvl]
+        assert "serve-slo" in entry["rationale"]
+        assert rec.operating_point_for_traffic(lvl) is not None
+    validate_artifact(rec.to_dict())             # strict schema accepts v5
+    loaded = load_artifact(artifact_path("expf"))
+    assert loaded.to_dict() == rec.to_dict()     # disk round trip lossless
+    # a level the artifact never analysed falls through to None
+    bare = copy.deepcopy(rec)
+    bare.selected_by_traffic = {}
+    assert bare.operating_point_for_traffic("high") is None
+
+
+def test_every_objective_emits_per_traffic_selections(one_artifact_dict):
+    """v5 contract: ``selected_by_traffic`` is computed for every
+    calibration, not only under the serve-slo objective, so serve
+    consumers can steer by traffic regardless of how the artifact was
+    calibrated."""
+    from repro.core.policy import TRAFFIC_LEVELS
+    assert set(one_artifact_dict["selected_by_traffic"]) \
+        == set(TRAFFIC_LEVELS)
+
+
+def test_v4_artifact_is_stale_and_falls_back(tmp_calibration):
+    """Pre-traffic (schema v4) artifacts must not be silently reinterpreted:
+    they are stale, warn, and degrade to defaults until recalibrated."""
+    calibrate(kernels=["expf"], grid_kw=TINY_GRID, workers=1)
+    path = artifact_path("expf")
+    d = json.load(open(path))
+    d["schema_version"] = SCHEMA_VERSION - 1
+    d.pop("selected_by_traffic")
+    del d["objective"]["slo_p99"]
+    json.dump(d, open(path, "w"))
+    with pytest.raises(StaleArtifactError):
+        validate_artifact(d)
+    clear_policy_table_cache()
+    with pytest.warns(UserWarning, match="stale"):
+        table = default_table()
+    assert table.resolve("serve").source == "default"
+
+
+def test_resolve_serve_by_traffic_level(tmp_calibration):
+    calibrate(kernels=["expf"], objective="serve-slo", slo_p99=400.0,
+              grid_kw=TINY_GRID, workers=1)
+    clear_policy_table_cache()
+    table = default_table()
+    rec = load_artifact(artifact_path("expf"))
+    for lvl in ("low", "high"):
+        got = table.resolve("serve", traffic=lvl)
+        assert got.source == "calibrated"
+        assert got == rec.operating_point_for_traffic(lvl)
+    # no traffic pin: the global selection (possibly via the latency class)
+    assert table.resolve("serve").source == "calibrated"
+    # an unanalysed level falls back instead of raising
+    assert table.resolve("serve", traffic="flash-crowd") == \
+        table.resolve("serve")
+    # overrides still beat the traffic selection
+    assert table.resolve("serve", traffic="high", queue_depth=16) \
+        .queue_depth == 16
+
+
+# ---------------------------------------------------------------------------
 # benchmarks.run smoke: per-section summary + non-zero exit on failure
 # ---------------------------------------------------------------------------
 

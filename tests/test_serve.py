@@ -1,0 +1,254 @@
+"""Serve-path tests: admission backpressure, continuous vs static (wave)
+slot refill, straggler-aware host dispatch, SLO accounting on the
+virtual-time simulation, and the live engine's continuous-batching
+equivalence (a mid-run admitted request decodes the same tokens as on a
+fresh engine)."""
+import jax
+import pytest
+
+from repro.config import RunConfig
+from repro.configs import get_reduced
+from repro.models import init_model_params
+from repro.serve import (AdmissionControl, AdmissionError,
+                         ContinuousScheduler, HostDispatch, ServeEngine,
+                         ServeSLO, StepCostModel, TraceRequest,
+                         simulate_serve)
+
+RC = RunConfig(remat=False, dtype="float32")
+KEY = jax.random.PRNGKey(0)
+
+#: flat cost model for scheduler-level tests: no machine-model dependency,
+#: round numbers make the virtual-time arithmetic auditable by hand
+FLAT = StepCostModel(cycles_decode_token=10.0, energy_decode_token=5.0,
+                     cycles_prefill_token=2.5, energy_prefill_token=1.25,
+                     overhead_cycles=20.0, source="flat-test")
+
+
+def _cfg():
+    return get_reduced("phi3-mini-3.8b")
+
+
+# --- admission control ------------------------------------------------------
+
+@pytest.mark.tier1
+def test_admission_queue_backpressure():
+    sched = ContinuousScheduler(2, admission=AdmissionControl(max_pending=2))
+    sched.submit(0, prompt_len=3, max_new=4, now=0.0)
+    sched.submit(1, prompt_len=3, max_new=4, now=0.0)
+    with pytest.raises(AdmissionError, match="queue full"):
+        sched.submit(2, prompt_len=3, max_new=4, now=0.0)
+    assert sched.n_rejected == 1
+    # draining the queue re-opens admission
+    sched.refill(now=0.0)
+    sched.submit(2, prompt_len=3, max_new=4, now=1.0)
+
+
+@pytest.mark.tier1
+def test_admission_rejects_unservable_shapes():
+    ac = AdmissionControl(max_pending=8, max_total_len=8)
+    sched = ContinuousScheduler(2, admission=ac)
+    with pytest.raises(AdmissionError, match="cache rows"):
+        sched.submit(0, prompt_len=6, max_new=4, now=0.0)
+    with pytest.raises(AdmissionError, match="empty request"):
+        sched.submit(1, prompt_len=0, max_new=4, now=0.0)
+    assert sched.n_rejected == 2
+    assert not sched.requests                # rejected requests leave no state
+
+
+# --- continuous vs static refill -------------------------------------------
+
+@pytest.mark.tier1
+def test_continuous_refill_reuses_freed_slot_immediately():
+    sched = ContinuousScheduler(2, mode="continuous")
+    for rid in range(3):
+        sched.submit(rid, prompt_len=1, max_new=2, now=0.0)
+    placed = sched.refill(now=0.0)
+    assert [r.rid for _, r in placed] == [0, 1]      # FIFO admission
+    sched.advance_prefill(0, 1, now=1.0)
+    sched.record_token(0, now=1.0)
+    assert sched.record_token(0, now=2.0)            # rid 0 finished
+    placed = sched.refill(now=2.0)
+    assert [(i, r.rid) for i, r in placed] == [(0, 2)]
+    assert sched.requests[1].phase != "done"         # rid 1 still mid-flight
+
+
+@pytest.mark.tier1
+def test_static_refill_waits_for_the_whole_wave():
+    sched = ContinuousScheduler(2, mode="static")
+    for rid in range(3):
+        sched.submit(rid, prompt_len=1, max_new=1, now=0.0)
+    assert len(sched.refill(now=0.0)) == 2
+    sched.advance_prefill(0, 1, now=1.0)
+    assert sched.record_token(0, now=1.0)            # slot 0 drained ...
+    assert sched.refill(now=1.0) == []               # ... but the wave holds
+    sched.advance_prefill(1, 1, now=2.0)
+    assert sched.record_token(1, now=2.0)
+    assert [r.rid for _, r in sched.refill(now=2.0)] == [2]
+
+
+@pytest.mark.tier1
+def test_request_lifecycle_phases_and_timestamps():
+    sched = ContinuousScheduler(1)
+    req = sched.submit(0, prompt_len=2, max_new=2, now=5.0)
+    assert req.phase == "queued"
+    sched.refill(now=6.0)
+    assert req.phase == "prefill" and req.admit_time == 6.0
+    sched.advance_prefill(0, 2, now=7.0)
+    assert req.phase == "decode" and req.prefill_end == 7.0
+    sched.record_token(0, now=8.0)
+    assert req.first_token == 8.0
+    sched.record_token(0, now=9.0)
+    assert req.phase == "done" and req.finish == 9.0
+    assert 5.0 <= req.admit_time <= req.prefill_end <= req.first_token \
+        <= req.finish
+
+
+# --- step-cost model --------------------------------------------------------
+
+def test_step_cost_model_from_default_point():
+    cost = StepCostModel.from_operating_point(None)
+    assert cost.source == "default"
+    assert 0 < cost.cycles_prefill_token < cost.cycles_decode_token
+    c1, e1 = cost.step_cost(1)
+    c8, e8 = cost.step_cost(8)
+    assert c8 > c1 and e8 > e1               # padded width is paid for
+    cp, ep = cost.step_cost(8, prefill_tokens=4)
+    assert cp > c8 and ep > e8               # chunked prefill costs extra
+
+
+# --- straggler-aware dispatch ----------------------------------------------
+
+def _drive(dispatch, steps=64):
+    total = 0.0
+    now = 0.0
+    for _ in range(steps):
+        dt = dispatch.step(100.0, now)
+        total += dt
+        now += dt
+    return total
+
+
+@pytest.mark.tier1
+def test_host_dispatch_flags_only_the_slow_host():
+    disp = HostDispatch(4, min_samples=8)
+    disp.set_speed(2, 3.0)
+    adaptive_cycles = _drive(disp)
+    assert disp.flagged_hosts == [2]
+    assert disp.weights[2] < 1.0             # work shifted off the straggler
+    assert disp.weights[0] == disp.weights[1] == disp.weights[3] == 1.0
+    assert disp.dead(64 * 400.0) == []       # slow-but-beating is not dead
+
+    rigid = HostDispatch(4, min_samples=8, threshold=float("inf"))
+    rigid.set_speed(2, 3.0)
+    assert _drive(rigid) / adaptive_cycles > 1.5
+
+
+@pytest.mark.tier1
+def test_host_dispatch_healthy_cluster_stays_unflagged():
+    disp = HostDispatch(4, min_samples=8)
+    _drive(disp)
+    assert disp.flagged_hosts == []
+    assert disp.weights == [1.0] * 4
+
+
+# --- virtual-time simulation ------------------------------------------------
+
+def _mini_trace():
+    """Two bursts of 4 on 2 slots: short and long requests mixed so wave
+    batching leaves slots idle behind the longest request."""
+    out = []
+    for b in range(2):
+        for i in range(4):
+            rid = 4 * b + i
+            out.append(TraceRequest(rid, arrival=b * 2000.0 + i * 5.0,
+                                    prompt_len=2 + (i % 2) * 2,
+                                    max_new=2 if i % 2 else 10))
+    return out
+
+
+@pytest.mark.tier1
+def test_simulate_serve_is_deterministic_and_complete():
+    slo = ServeSLO(p99_cycles_per_token=1e6)
+    a = simulate_serve(_mini_trace(), 2, FLAT, mode="continuous", slo=slo)
+    b = simulate_serve(_mini_trace(), 2, FLAT, mode="continuous", slo=slo)
+    assert a.to_dict() == b.to_dict()
+    assert a.n_completed == 8 and a.n_unfinished == 0 and a.n_rejected == 0
+    assert a.tokens_out == sum(r.max_new for r in _mini_trace())
+    assert a.p50_latency <= a.p99_latency
+    assert 0.0 <= a.slo["attainment"] <= 1.0
+    assert a.slo["throughput_at_slo"] <= a.throughput + 1e-12
+
+
+@pytest.mark.tier1
+def test_continuous_beats_static_on_bursty_mix():
+    slo = ServeSLO(p99_cycles_per_token=1e6)
+    cont = simulate_serve(_mini_trace(), 2, FLAT, mode="continuous", slo=slo)
+    stat = simulate_serve(_mini_trace(), 2, FLAT, mode="static", slo=slo)
+    # freed slots refill behind the long requests: strictly fewer steps, so
+    # less total time, less padded-slot energy, and lower p99
+    assert cont.total_cycles < stat.total_cycles
+    assert cont.energy_per_token < stat.energy_per_token
+    assert cont.p99_latency < stat.p99_latency
+
+
+def test_simulate_serve_sheds_load_beyond_max_pending():
+    trace = [TraceRequest(i, arrival=0.0, prompt_len=1, max_new=4)
+             for i in range(8)]
+    rep = simulate_serve(trace, 2, FLAT, mode="continuous",
+                         slo=ServeSLO(p99_cycles_per_token=1e6),
+                         admission=AdmissionControl(max_pending=3))
+    # 2 go straight to slots on the first refill sweep is NOT how admission
+    # works: all 8 arrive at t=0, the queue holds 3, the rest are shed
+    assert rep.n_rejected == 5
+    assert rep.n_completed == 3
+    assert rep.n_unfinished == 0
+
+
+# --- live engine ------------------------------------------------------------
+
+def test_engine_midrun_admission_matches_fresh_engine():
+    """The continuous-batching core: a request admitted into a freed slot
+    mid-run decodes exactly the tokens it would on a fresh engine."""
+    cfg = _cfg()
+    params = init_model_params(KEY, cfg)
+    prompt, max_new = [7, 3, 9, 1], 5
+
+    eng = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64)
+    eng.submit([1, 2, 3], max_new=8)
+    eng.submit([4, 5, 6], max_new=2)         # finishes early, frees its slot
+    for _ in range(4):
+        eng.step()
+    rid = eng.submit(prompt, max_new=max_new)
+    done = eng.run()
+    assert len(done) == 3
+
+    fresh = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64)
+    rid_f = fresh.submit(prompt, max_new=max_new)
+    assert done[rid].generated == fresh.run()[rid_f].generated
+
+
+def test_engine_admission_error_and_metrics():
+    cfg = _cfg()
+    params = init_model_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, RC, batch_slots=2, max_len=16)
+    with pytest.raises(AdmissionError, match="cache rows"):
+        eng.submit(list(range(14)), max_new=8)
+    eng.submit([1, 2, 3], max_new=4)
+    eng.run()
+    rep = eng.metrics(slo=ServeSLO(p99_cycles_per_token=1e9))
+    assert rep.mode == "continuous"
+    assert rep.n_completed == 1 and rep.n_rejected == 1
+    assert rep.tokens_out == 4
+    assert rep.slo["attainment"] == 1.0
+    assert rep.cost_source in ("calibrated", "default", "flat-fallback")
+
+
+def test_engine_static_mode_still_serves_everything():
+    cfg = _cfg()
+    params = init_model_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64,
+                      mode="static")
+    rids = [eng.submit([1 + i, 2, 3], max_new=3) for i in range(3)]
+    done = eng.run()
+    assert set(done) == set(rids)
+    assert all(len(r.generated) == 3 for r in done.values())

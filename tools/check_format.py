@@ -1,0 +1,88 @@
+"""Mechanical layout gate for CI: stdlib-only, so it runs anywhere the
+tests run (no formatter dependency to install or pin).
+
+``ruff check`` (the lint step) gates correctness-class findings; this gate
+covers the purely mechanical layout invariants a formatter would enforce,
+without imposing a full reformat of the hand-wrapped code:
+
+* no tab characters (indentation is spaces-only),
+* no trailing whitespace,
+* LF line endings (no CR),
+* every file ends with exactly one newline,
+* no line longer than :data:`MAX_LINE` columns (mirrors ``ruff.toml``'s
+  ``line-length``).
+
+Exit is non-zero with a ``path:line: finding`` list when anything is off;
+``--fix`` rewrites the fixable findings (tabs are reported only — expanding
+them needs a human to pick the intended column).
+"""
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+#: directories whose Python sources are gated
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+#: mirrors line-length in ruff.toml
+MAX_LINE = 100
+
+
+def python_files():
+    for base in SCAN_DIRS:
+        for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, base)):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def check_file(path, fix=False):
+    with open(path, "rb") as f:
+        raw = f.read()
+    rel = os.path.relpath(path, ROOT)
+    problems = []
+    if b"\r" in raw:
+        problems.append(f"{rel}: CR line endings (expected LF)")
+    text = raw.decode("utf-8").replace("\r\n", "\n").replace("\r", "\n")
+    lines = text.split("\n")
+    for i, line in enumerate(lines, 1):
+        if "\t" in line:
+            problems.append(f"{rel}:{i}: tab character")
+        if line != line.rstrip():
+            problems.append(f"{rel}:{i}: trailing whitespace")
+        if len(line) > MAX_LINE:
+            problems.append(f"{rel}:{i}: line too long "
+                            f"({len(line)} > {MAX_LINE})")
+    if raw and not text.endswith("\n"):
+        problems.append(f"{rel}: missing final newline")
+    elif text.endswith("\n\n"):
+        problems.append(f"{rel}: multiple trailing newlines")
+    if fix and problems:
+        fixed = "\n".join(ln.rstrip() for ln in lines)
+        fixed = fixed.rstrip("\n") + "\n" if fixed.strip() else ""
+        with open(path, "w", newline="\n") as f:
+            f.write(fixed)
+    return problems
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fix", action="store_true",
+                    help="rewrite fixable findings in place (whitespace, "
+                         "line endings, final newline)")
+    args = ap.parse_args(argv)
+    problems = []
+    n = 0
+    for path in python_files():
+        n += 1
+        problems.extend(check_file(path, fix=args.fix))
+    verb = "fixed/remaining" if args.fix else "found"
+    print(f"checked {n} files, {len(problems)} findings {verb}")
+    if problems:
+        print("\n".join(problems))
+        if not args.fix:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
