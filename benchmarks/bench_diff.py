@@ -16,10 +16,13 @@ Two classes of check, matched to how reproducible each metric is:
     :data:`REL_TOL`), including the headline 1->4-core speedup.
 
 * **floor checks** — metrics that embed wall-clock throughput (sweep-engine
-  points/sec ratios) cannot be exactly reproduced on a different machine,
-  so the committed values are only checked against static floors: the gate
-  catches a regression that slipped into a committed artifact, not machine
-  noise.
+  points/sec ratios, the live engine's chunked-prefill TTFT gains in
+  ``BENCH_serve_prefill.json``) cannot be exactly reproduced on a different
+  machine, so the committed values are only checked against static floors:
+  the gate catches a regression that slipped into a committed artifact, not
+  machine noise.  ``BENCH_serve_prefill.json`` additionally must assert
+  bit-exactness (its ``headline.bit_exact`` flag) and a bounded chunk-jit
+  cache.
 
 A per-metric delta table prints to stdout and, when ``$GITHUB_STEP_SUMMARY``
 is set, is appended there so the drift is visible on the job page without
@@ -188,6 +191,39 @@ def check_cluster_strong(rows, problems):
                      "== 0", n_drift == 0))
 
 
+def check_serve_prefill(rows, problems):
+    """Committed live-engine chunked-prefill gate artifact.  Wall-clock and
+    cycles TTFT gains are floor-checked against the embedded bar (the wall
+    number is machine-dependent, so no exact compare); the bit-exactness
+    flag and the bounded chunk-jit-cache count must hold outright."""
+    art = _load("BENCH_serve_prefill.json")
+    head = art["headline"]
+    bar = head["min_required"]
+    for key in ("ttft_wall_gain", "ttft_cycles_gain"):
+        ok = head[key] >= bar
+        if not ok:
+            problems.append(
+                f"BENCH_serve_prefill.json:headline.{key} = {head[key]} "
+                f"fell below the {bar} floor")
+        rows.append(_row(f"serve_prefill.headline.{key}", bar, head[key],
+                         f">= {bar}", ok))
+    ok = head["bit_exact"] is True
+    if not ok:
+        problems.append(
+            "BENCH_serve_prefill.json: chunked prefill was committed "
+            "without bit-exactness vs the token-by-token path")
+    rows.append(_row("serve_prefill.headline.bit_exact", True,
+                     head["bit_exact"], "== True", ok))
+    compiles, bound = art["prefill_compiles"], art["max_prefill_compiles"]
+    ok = compiles <= bound
+    if not ok:
+        problems.append(
+            f"BENCH_serve_prefill.json: {compiles} prefill compiles "
+            f"exceed the log2(chunk)+1 = {bound} bound")
+    rows.append(_row("serve_prefill.prefill_compiles", bound, compiles,
+                     f"<= {bound}", ok))
+
+
 def check_floors(rows, problems):
     """Committed wall-clock ratios and gated gains stay above their bars."""
     floors = list(FLOORS)
@@ -249,7 +285,8 @@ def _emit_summary(table, problems):
 def run():
     t0 = time.time()
     rows, problems = [], []
-    for check in (check_serve_slo, check_cluster_strong, check_floors):
+    for check in (check_serve_slo, check_cluster_strong,
+                  check_serve_prefill, check_floors):
         try:
             check(rows, problems)
         except AssertionError as e:

@@ -64,6 +64,8 @@ def main(argv=None) -> None:
              front_diff.smoke),
             ("serve SLO smoke (continuous vs wave batching under "
              "trace-driven load)", serve_slo.smoke),
+            ("serve prefill smoke (live chunked prefill vs token-by-token "
+             "TTFT, bit-exact)", serve_slo.prefill_smoke),
         ])
         return
 
@@ -89,6 +91,8 @@ def main(argv=None) -> None:
         ("front diff (committed Pareto-front drift gate)", front_diff.main),
         ("serve SLO (continuous vs wave batching under trace-driven load)",
          serve_slo.main),
+        ("serve prefill (live chunked prefill >=2x TTFT gate, bit-exact)",
+         serve_slo.prefill_main),
         ("kernels (interpret-mode micro-bench)", kernel_bench.main),
         ("collective policy (bulk vs ring)", collective_policy.main),
         ("roofline (from dry-run artifacts)", roofline_table.main),

@@ -36,9 +36,16 @@ Writes ``artifacts/BENCH_serve_slo.json`` (``BENCH_serve_slo_smoke.json``
 under ``--smoke``) with the cost model, the SLO, per-trace per-mode reports
 and the headline gains.  Emits ``name,us_per_call,derived`` CSV rows like
 every other section.
+
+A second, live-engine section (``run_prefill`` / ``--prefill``) gates the
+real chunked-prefill path: bit-exact tokens and cache vs the token-by-token
+reference, >= :data:`MIN_PREFILL_TTFT_GAIN` x TTFT at prompt_len >= 64, and
+a bounded chunk-bucket jit cache.  It writes
+``artifacts/BENCH_serve_prefill.json``.
 """
 import json
 import os
+import sys
 import time
 
 import numpy as np
@@ -50,6 +57,7 @@ from repro.serve.scheduler import (AdmissionControl, HostDispatch, ServeSLO,
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(ROOT, "artifacts", "BENCH_serve_slo.json")
+PREFILL_OUT_PATH = os.path.join(ROOT, "artifacts", "BENCH_serve_prefill.json")
 
 #: the acceptance bar: continuous batching must beat wave batching by this
 #: factor on bursty-trace throughput-at-SLO
@@ -262,5 +270,199 @@ def smoke():
         print(f"{name},{us:.1f},{derived:.4f}")
 
 
+# ---------------------------------------------------------------------------
+# live-engine chunked-prefill gate
+# ---------------------------------------------------------------------------
+# This section runs the *real* jitted engine (not the virtual-time
+# simulation): the chunked prefill path (`models.model.prefill_step` driven
+# by `ServeEngine(prefill="chunked")`) against the token-by-token reference
+# (`prefill="token"`) on the same params, prompt and pinned cost model.
+#
+# Gates:
+# * generated tokens AND final cache rows are bit-exact between the two
+#   paths (the chunk kernel scans the same decode_step body, so any diff is
+#   a real bug, not float noise);
+# * cycles-equivalent TTFT (deterministic: pinned cost model, fixed
+#   prompt) improves >= MIN_PREFILL_TTFT_GAIN x;
+# * measured wall-clock TTFT (median over trials, warm jits) improves
+#   >= MIN_PREFILL_TTFT_GAIN x in full mode (a softer
+#   MIN_PREFILL_TTFT_GAIN_SMOKE bar under --smoke: CI machines are noisy);
+# * the chunk-bucket jit cache stays bounded: at most
+#   log2(prefill_chunk) + 1 compiled prefill programs.
+
+#: the acceptance bar from ROADMAP item 3's residual gap: chunked prefill
+#: must at least halve TTFT at prompt_len >= 64
+MIN_PREFILL_TTFT_GAIN = 2.0
+#: smoke keeps a softer wall-clock bar (shared CI machines); the
+#: deterministic cycles-domain gate stays at MIN_PREFILL_TTFT_GAIN
+MIN_PREFILL_TTFT_GAIN_SMOKE = 1.2
+
+PREFILL_FULL = dict(arch="phi3-mini-3.8b", prompt_len=64, max_new=8,
+                    batch_slots=2, prefill_chunk=16, trials=5, seed=0)
+PREFILL_SMOKE = dict(arch="phi3-mini-3.8b", prompt_len=64, max_new=4,
+                     batch_slots=2, prefill_chunk=16, trials=3, seed=0)
+
+
+def _prefill_engines(cfg):
+    """Both engines (chunked + token reference) over shared params and the
+    pinned paper-default operating point — hermetic w.r.t. live
+    calibration artifacts, like the rest of this benchmark."""
+    import jax
+    from repro.config import RunConfig
+    from repro.configs import get_reduced
+    from repro.models import init_model_params
+    from repro.serve import ServeEngine
+
+    mcfg = get_reduced(cfg["arch"])
+    rc = RunConfig(dtype="float32", param_dtype="float32", remat=False)
+    params = init_model_params(jax.random.PRNGKey(cfg["seed"]), mcfg)
+    rng = np.random.RandomState(cfg["seed"] + 1)
+    prompt = [int(t) for t in rng.randint(0, mcfg.vocab,
+                                          size=cfg["prompt_len"])]
+    max_len = cfg["prompt_len"] + cfg["max_new"] + 8
+    cost = _cost_model()
+
+    def mk(prefill):
+        return ServeEngine(params, mcfg, rc,
+                           batch_slots=cfg["batch_slots"], max_len=max_len,
+                           operating_point=OperatingPoint(),
+                           cost_model=cost, prefill=prefill,
+                           prefill_chunk=cfg["prefill_chunk"])
+    return mk, prompt
+
+
+def _measure_ttft(eng, prompt, max_new, trials):
+    """Warm run (compiles) + ``trials`` timed runs; returns the warm run's
+    generated tokens, the cycles-domain TTFT, and per-trial wall TTFTs."""
+    import math as _math
+    rid0 = eng.submit(prompt, max_new=max_new)
+    eng.run(max_steps=100_000)
+    tokens = list(eng.finished[rid0].generated)
+    sreq = eng.sched.requests[rid0]
+    ttft_cycles = sreq.first_token - sreq.arrival
+    walls = []
+    for _ in range(trials):
+        rid = eng.submit(prompt, max_new=max_new)
+        t0 = time.time()
+        while not eng.requests[rid].generated:
+            eng.step()
+        walls.append(time.time() - t0)
+        eng.run(max_steps=100_000)           # drain before the next trial
+    assert _math.isfinite(ttft_cycles)
+    return tokens, ttft_cycles, walls
+
+
+def run_prefill(cfg=None, out_path=PREFILL_OUT_PATH,
+                min_wall_gain=MIN_PREFILL_TTFT_GAIN):
+    import jax.numpy as jnp
+    cfg = cfg or PREFILL_FULL
+    t0 = time.time()
+    mk, prompt = _prefill_engines(cfg)
+
+    chunked = mk("chunked")
+    token = mk("token")
+    tok_c, cyc_c, walls_c = _measure_ttft(chunked, prompt, cfg["max_new"],
+                                          cfg["trials"])
+    tok_t, cyc_t, walls_t = _measure_ttft(token, prompt, cfg["max_new"],
+                                          cfg["trials"])
+
+    # gate: bit-exact generated tokens and final cache rows.  Only the
+    # serving slot's rows are compared: free-slot rows are junk by design
+    # (the unmasked token-by-token reference advances them every step, the
+    # masked chunk path never touches them) and are zeroed before reuse.
+    def _slot_rows(cache, i):
+        return {k: (v if v.ndim == 0 else v[i] if v.ndim == 1 else v[:, i])
+                for k, v in cache.items()}
+
+    rows_c = _slot_rows(chunked.cache, 0)
+    rows_t = _slot_rows(token.cache, 0)
+    tokens_exact = tok_c == tok_t
+    cache_exact = (set(rows_c) == set(rows_t) and all(
+        bool(jnp.array_equal(rows_c[k], rows_t[k])) for k in rows_c))
+    if not (tokens_exact and cache_exact):
+        raise AssertionError(
+            f"chunked prefill is not bit-exact with the token-by-token "
+            f"path: tokens_exact={tokens_exact} cache_exact={cache_exact} "
+            f"(chunked={tok_c} token={tok_t})")
+
+    # gate: bounded chunk-bucket jit cache
+    import math
+    max_compiles = int(math.log2(cfg["prefill_chunk"])) + 1
+    if chunked.prefill_compiles > max_compiles:
+        raise AssertionError(
+            f"chunk-bucket jit cache unbounded: {chunked.prefill_compiles} "
+            f"compiles > log2({cfg['prefill_chunk']})+1 = {max_compiles}")
+
+    # gate: deterministic cycles-domain TTFT gain (pinned cost model)
+    cycles_gain = cyc_t / max(cyc_c, 1e-9)
+    if cycles_gain < MIN_PREFILL_TTFT_GAIN:
+        raise AssertionError(
+            f"chunked prefill gains only {cycles_gain:.2f}x cycles-domain "
+            f"TTFT at prompt_len={cfg['prompt_len']} "
+            f"(required {MIN_PREFILL_TTFT_GAIN}x)")
+
+    # gate: measured wall-clock TTFT gain (median over warm trials)
+    wall_c = float(np.median(walls_c))
+    wall_t = float(np.median(walls_t))
+    wall_gain = wall_t / max(wall_c, 1e-12)
+    if wall_gain < min_wall_gain:
+        raise AssertionError(
+            f"chunked prefill gains only {wall_gain:.2f}x wall-clock TTFT "
+            f"at prompt_len={cfg['prompt_len']} (required {min_wall_gain}x)")
+
+    report = {
+        "config": dict(cfg),
+        "ttft": {
+            "cycles_chunked": cyc_c, "cycles_token": cyc_t,
+            "wall_s_chunked": walls_c, "wall_s_token": walls_t,
+            "wall_s_chunked_median": wall_c, "wall_s_token_median": wall_t,
+        },
+        "steps": {"chunked": chunked._n_steps, "token": token._n_steps},
+        "prefill_compiles": chunked.prefill_compiles,
+        "max_prefill_compiles": max_compiles,
+        "headline": {
+            "ttft_wall_gain": wall_gain,
+            "ttft_cycles_gain": cycles_gain,
+            "bit_exact": bool(tokens_exact and cache_exact),
+            "min_required": MIN_PREFILL_TTFT_GAIN,
+        },
+    }
+    rows = [
+        ("serve_prefill_ttft_wall_gain", 0.0, wall_gain),
+        ("serve_prefill_ttft_cycles_gain", 0.0, cycles_gain),
+        ("serve_prefill_compiles", 0.0, float(chunked.prefill_compiles)),
+    ]
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    rows = [(name, us, derived) for name, _z, derived in rows]
+
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return rows
+
+
+def prefill_main():
+    for name, us, derived in run_prefill():
+        print(f"{name},{us:.1f},{derived:.4f}")
+    print(f"# wrote {PREFILL_OUT_PATH}")
+
+
+def prefill_smoke():
+    """Smaller run, separate artifact; the wall-clock bar softens to
+    MIN_PREFILL_TTFT_GAIN_SMOKE but bit-exactness, the cycles-domain gain
+    and the bounded jit cache are still hard gates."""
+    out = os.path.join(ROOT, "artifacts", "BENCH_serve_prefill_smoke.json")
+    rows = run_prefill(cfg=PREFILL_SMOKE, out_path=out,
+                       min_wall_gain=MIN_PREFILL_TTFT_GAIN_SMOKE)
+    if not rows:
+        raise AssertionError("serve_prefill smoke produced no rows")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.4f}")
+
+
 if __name__ == "__main__":
-    main()
+    if "--prefill" in sys.argv[1:]:
+        prefill_main()
+    else:
+        main()

@@ -1,5 +1,13 @@
 """Batched serving: continuous batching over a reduced model, several
-concurrent requests of different lengths.
+concurrent requests of different lengths, with chunked prefill and
+measured-traffic operating points.
+
+No ``traffic`` argument is passed to the engine, so it runs in
+measured-traffic mode: a TrafficEstimator watches the arrival stream and,
+once warm, re-resolves the calibrated per-traffic operating point at the
+next refill boundary.  The burst of same-clock submissions below saturates
+the estimate, so the engine retargets to the "high" traffic point mid-run
+— watch the traffic history it prints.
 
   PYTHONPATH=src python examples/serve_batch.py --arch recurrentgemma-2b
 """
@@ -20,13 +28,20 @@ def main():
                     choices=[a for a in ARCHS if a != "hubert-xlarge"])
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--prefill", choices=("chunked", "token"),
+                    default="chunked")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
     rc = RunConfig(dtype="float32", param_dtype="float32", remat=False)
     params = init_model_params(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(params, cfg, rc, batch_slots=3, max_len=128)
+    eng = ServeEngine(params, cfg, rc, batch_slots=3, max_len=128,
+                      prefill=args.prefill)
+    print(f"measured-traffic mode: level starts {eng.traffic_level} "
+          f"(estimator cold), prefill={args.prefill}")
 
+    # a same-clock burst: offered load saturates -> the estimator reads
+    # "high" and the engine retargets at the first refill boundary
     for i in range(args.requests):
         prompt = list(range(1 + i, 5 + 2 * i))
         eng.submit(prompt, max_new=args.max_new)
@@ -36,7 +51,13 @@ def main():
     dt = time.time() - t0
     n_tok = sum(len(r.generated) for r in done.values())
     print(f"{cfg.name}: {len(done)} requests, {n_tok} tokens, "
-          f"{n_tok/dt:.1f} tok/s")
+          f"{n_tok/dt:.1f} tok/s, {eng._n_steps} engine steps "
+          f"({eng.prefill_compiles} prefill chunk programs)")
+    print(f"measured traffic level: {eng.traffic_level}; "
+          f"{len(eng.traffic_history)} retarget(s)")
+    for h in eng.traffic_history:
+        print(f"  @{h['clock']:.0f} cyc -> {h['level']} "
+              f"(rho~{h['offered_load']:.2f}, policy={h['policy']})")
     for rid in sorted(done):
         r = done[rid]
         print(f"  req{rid} prompt[:4]={r.prompt[:4]} -> {r.generated}")

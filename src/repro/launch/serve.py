@@ -31,9 +31,18 @@ def main() -> None:
                          "batching, the measurable baseline)")
     ap.add_argument("--traffic", choices=sorted(TRAFFIC_LEVELS),
                     default=None,
-                    help="offered-load level: selects the calibration "
-                         "artifact's per-traffic serve-slo operating point "
-                         "(schema v5) when one exists")
+                    help="OVERRIDE the measured offered-load level: pins "
+                         "the calibration artifact's per-traffic serve-slo "
+                         "operating point (schema v5). Without it the "
+                         "engine estimates the level from the arrival "
+                         "stream and re-resolves at refill boundaries")
+    ap.add_argument("--prefill", choices=("chunked", "token"),
+                    default="chunked",
+                    help="prompt ingestion: chunked (jitted prefill_step, "
+                         "C tokens per call) or token (one-token steps, "
+                         "the measurable TTFT baseline)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="max prompt tokens per prefilling slot per step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -43,11 +52,14 @@ def main() -> None:
     rc = RunConfig(dtype="float32", param_dtype="float32", remat=False)
     params = init_model_params(jax.random.PRNGKey(args.seed), cfg)
     eng = ServeEngine(params, cfg, rc, batch_slots=args.slots, max_len=256,
-                      mode=args.mode, traffic=args.traffic)
+                      mode=args.mode, traffic=args.traffic,
+                      prefill=args.prefill, prefill_chunk=args.prefill_chunk)
     op = eng.operating_point
+    traffic = (f"traffic={args.traffic} (pinned)" if args.traffic
+               else "traffic=measured")
     print(f"policy={op.policy.value} (source={op.source}, "
-          f"cores={op.n_cores}, slots={len(eng.slots)}, mode={args.mode}"
-          + (f", traffic={args.traffic}" if args.traffic else "") + ")")
+          f"cores={op.n_cores}, slots={len(eng.slots)}, mode={args.mode}, "
+          f"prefill={args.prefill}, {traffic})")
 
     rng = jax.random.PRNGKey(args.seed + 1)
     rids = []
@@ -70,6 +82,14 @@ def main() -> None:
           f"{rep.energy_per_token:.1f} J-equiv/token, "
           f"p50/p99 latency {rep.p50_latency:.1f}/{rep.p99_latency:.1f} "
           f"cyc/tok, p50 TTFT {rep.p50_ttft:.0f} cyc")
+    if args.traffic is None:
+        level = eng.traffic_level or "still cold (too few arrivals)"
+        print(f"measured traffic: {level}; "
+              f"{len(eng.traffic_history)} retarget(s)")
+        for h in eng.traffic_history:
+            print(f"  @{h['clock']:.0f} cyc -> {h['level']} "
+                  f"(rho~{h['offered_load']:.2f}, policy={h['policy']}, "
+                  f"source={h['source']})")
     for rid, prompt in rids:
         r = done[rid]
         print(f"  req{rid}: prompt={prompt} -> {r.generated}")

@@ -1,5 +1,7 @@
 from .model import (cache_spec, decode_step, forward, init_cache,
-                    init_model_params, input_specs, param_shapes, param_specs)
+                    init_model_params, input_specs, param_shapes, param_specs,
+                    prefill_step)
 
 __all__ = ["cache_spec", "decode_step", "forward", "init_cache",
-           "init_model_params", "input_specs", "param_shapes", "param_specs"]
+           "init_model_params", "input_specs", "param_shapes", "param_specs",
+           "prefill_step"]

@@ -410,6 +410,72 @@ def _hybrid_decode(params, cache, x, cfg: ModelConfig, rc: RunConfig, dtype):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: C prompt tokens per slot per jitted call
+# ---------------------------------------------------------------------------
+
+def _merge_masked(active: jax.Array, new: jax.Array, old: jax.Array
+                  ) -> jax.Array:
+    """Per-slot select between two cache leaves: batch is axis 0 of the
+    per-sequence ``len`` vector and axis 1 of every stacked leaf (same
+    convention as the engine's slot-reset)."""
+    if new.ndim == 0:
+        return new
+    if new.ndim == 1:                          # cache["len"]: (B,)
+        return jnp.where(active, new, old)
+    shape = (1, active.shape[0]) + (1,) * (new.ndim - 2)
+    return jnp.where(active.reshape(shape), new, old)
+
+
+def prefill_step(params: Pytree, cache: Pytree, batch: Dict[str, jax.Array],
+                 cfg: ModelConfig, rc: RunConfig
+                 ) -> Tuple[jax.Array, Pytree]:
+    """Ingest a chunk of up to C prompt tokens per slot in ONE jitted call.
+
+    ``batch = {"tokens": (B, C) int32, "n_tokens": (B,) int32}`` — slot
+    ``i`` consumes its first ``n_tokens[i]`` columns starting at its own
+    cache position ``cache["len"][i]`` (``0 <= n_tokens[i] <= C``; ``0``
+    leaves the slot completely untouched).  Mixed-phase batches are the
+    point: a slot mid-prefill (``n_tokens = C``) coexists with a slot
+    mid-decode (``n_tokens = 1``, its column 0 holding the last generated
+    token) and with free slots (``n_tokens = 0``) in the same fixed-shape
+    call.
+
+    Returns ``(logits, cache)`` where ``logits[i]`` is the next-token
+    distribution after slot ``i``'s **last valid column** — for a decoding
+    slot that is the ordinary decode logits; for a slot whose prefill
+    completes inside this chunk it is the first-generated-token logits.
+
+    Bit-exactness with the token-by-token path is by construction: the
+    chunk columns are advanced by ``lax.scan`` over the *same*
+    :func:`decode_step` body (per-sequence positions, attention/SSM/RG-LRU
+    cache writes included), with a per-slot mask selecting whether the
+    column's update lands — so one ``(B, C)`` call produces exactly the
+    tokens and final cache rows that C single-token calls would, while the
+    per-step host dispatch, device sync, and scheduling overhead are paid
+    once per chunk instead of once per token (the ``PREFILL_FRACTION``
+    discount the serve cost model charges prompt tokens).
+    """
+    tokens, n_tokens = batch["tokens"], batch["n_tokens"]
+    B, C = tokens.shape
+
+    def column(carry, j):
+        cache, logits = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, j, 1, axis=1)   # (B, 1)
+        active = j < n_tokens                                      # (B,)
+        step_logits, new_cache = decode_step(params, cache,
+                                             {"tokens": tok}, cfg, rc)
+        cache = {k: _merge_masked(active, new_cache[k], cache[k])
+                 for k in cache}
+        logits = jnp.where(active[:, None], step_logits, logits)
+        return (cache, logits), None
+
+    logits0 = jnp.zeros((B, cfg.vocab), jnp.float32)
+    (cache, logits), _ = jax.lax.scan(column, (cache, logits0),
+                                      jnp.arange(C))
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
 # canonical input specs per (arch x shape) cell — ShapeDtypeStructs only
 # ---------------------------------------------------------------------------
 

@@ -1,11 +1,12 @@
 from .engine import Request, ServeEngine
-from .scheduler import (AdmissionControl, AdmissionError,
+from .scheduler import (PREFILL_FRACTION, AdmissionControl, AdmissionError,
                         ContinuousScheduler, HostDispatch, ServeReport,
                         ServeSLO, StepCostModel, TraceRequest,
-                        simulate_serve)
+                        TrafficEstimator, simulate_serve)
 
 __all__ = [
     "AdmissionControl", "AdmissionError", "ContinuousScheduler",
-    "HostDispatch", "Request", "ServeEngine", "ServeReport", "ServeSLO",
-    "StepCostModel", "TraceRequest", "simulate_serve",
+    "HostDispatch", "PREFILL_FRACTION", "Request", "ServeEngine",
+    "ServeReport", "ServeSLO", "StepCostModel", "TraceRequest",
+    "TrafficEstimator", "simulate_serve",
 ]

@@ -51,7 +51,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
-from ..core.policy import OperatingPoint
+from ..core.policy import TRAFFIC_LEVELS, OperatingPoint
 from ..runtime.straggler import Heartbeat, StragglerMonitor
 
 
@@ -120,24 +120,98 @@ class ServeRequest:
         return "decode" if self.prefill_cursor >= self.prompt_len else "prefill"
 
 
+class TrafficEstimator:
+    """EWMA arrival-rate estimator mapping the *measured* request stream
+    onto the calibration's :data:`~repro.core.policy.TRAFFIC_LEVELS`.
+
+    The schema-v5 ``serve-slo`` calibration selects one operating point per
+    offered-load level; this estimator closes that loop against live
+    traffic so the serve engine can re-resolve its per-traffic point from
+    what actually arrives instead of a static launch flag.
+
+    Offered load is estimated as ``rate x work / capacity``:
+
+    * ``rate`` — reciprocal of an EWMA over inter-arrival gaps (same-clock
+      bursts drive the gap toward zero, saturating the estimate — the
+      right answer for a thundering herd);
+    * ``work`` — EWMA of per-request work tokens
+      (``max_new + PREFILL_FRACTION * prompt_len``, the same discount the
+      step cost model charges chunked prompt tokens);
+    * ``capacity`` — the engine's full-width decode token rate
+      (tokens/cycle), supplied by the owner and updated when the operating
+      point (and so the cost model) changes.
+
+    :meth:`level` maps the clamped load fraction to the *nearest*
+    :data:`TRAFFIC_LEVELS` entry, or ``None`` until ``min_arrivals``
+    arrivals have been observed — a cold estimator must not trigger a
+    re-selection on no evidence.  Every arrival is observed, shed ones
+    included: admission rejections are offered load too.
+    """
+
+    def __init__(self, capacity_tokens_per_cycle: float,
+                 alpha: float = 0.25, min_arrivals: int = 4):
+        assert 0.0 < alpha <= 1.0, alpha
+        self.capacity = capacity_tokens_per_cycle
+        self.alpha = alpha
+        self.min_arrivals = min_arrivals
+        self.n_arrivals = 0
+        self._gap: Optional[float] = None      # EWMA inter-arrival gap
+        self._work: Optional[float] = None     # EWMA work tokens / request
+        self._last: Optional[float] = None     # previous arrival timestamp
+
+    def observe(self, now: float, prompt_len: int, max_new: int) -> None:
+        work = max_new + PREFILL_FRACTION * prompt_len
+        self._work = work if self._work is None else \
+            (1.0 - self.alpha) * self._work + self.alpha * work
+        if self._last is not None:
+            gap = max(now - self._last, 0.0)
+            self._gap = gap if self._gap is None else \
+                (1.0 - self.alpha) * self._gap + self.alpha * gap
+        self._last = now
+        self.n_arrivals += 1
+
+    def offered_load(self) -> Optional[float]:
+        """Estimated offered load as a fraction of service capacity in
+        [0, 1], or None while cold (fewer than ``min_arrivals`` seen)."""
+        if self.n_arrivals < self.min_arrivals or self._gap is None \
+                or self._work is None:
+            return None
+        rate = 1.0 / max(self._gap, 1e-12)
+        rho = rate * self._work / max(self.capacity, 1e-12)
+        return min(max(rho, 0.0), 1.0)
+
+    def level(self) -> Optional[str]:
+        """The nearest :data:`TRAFFIC_LEVELS` name, or None while cold."""
+        rho = self.offered_load()
+        if rho is None:
+            return None
+        return min(TRAFFIC_LEVELS,
+                   key=lambda name: abs(TRAFFIC_LEVELS[name] - rho))
+
+
 class ContinuousScheduler:
     """Arrival queue + slot assignment for a fixed-width decode batch.
 
     ``mode="continuous"`` refills any free slot the moment the queue is
     non-empty; ``mode="static"`` reproduces wave batching (refill only once
     *every* slot has drained) and exists as the baseline the serve-SLO
-    benchmark measures continuous batching against.
+    benchmark measures continuous batching against.  An attached
+    :class:`TrafficEstimator` observes every arrival timestamp (admitted or
+    shed) so the owner can map measured load onto the calibrated traffic
+    levels.
     """
 
     MODES = ("continuous", "static")
 
     def __init__(self, n_slots: int, mode: str = "continuous",
-                 admission: Optional[AdmissionControl] = None):
+                 admission: Optional[AdmissionControl] = None,
+                 estimator: Optional[TrafficEstimator] = None):
         if mode not in self.MODES:
             raise ValueError(f"mode must be one of {self.MODES}, got {mode!r}")
         self.n_slots = n_slots
         self.mode = mode
         self.admission = admission or AdmissionControl()
+        self.estimator = estimator
         self.queue: Deque[ServeRequest] = deque()
         self.slots: List[Optional[ServeRequest]] = [None] * n_slots
         self.requests: Dict[int, ServeRequest] = {}
@@ -147,6 +221,8 @@ class ContinuousScheduler:
     # -- lifecycle ---------------------------------------------------------
     def submit(self, rid: int, prompt_len: int, max_new: int,
                now: float) -> ServeRequest:
+        if self.estimator is not None:
+            self.estimator.observe(now, prompt_len, max_new)
         reason = self.admission.reject_reason(prompt_len, max_new,
                                               len(self.queue))
         if reason is not None:
@@ -213,9 +289,11 @@ class ContinuousScheduler:
 #: see core.policy.WORKLOAD_PROXIES)
 _SAMPLES_PER_TOKEN = 1.0
 #: chunked-prefill marginal cost per prompt token, as a fraction of a decode
-#: token: prefill batches prompt tokens through one pass, amortizing the
-#: per-step scheduling overhead the decode path pays every token
-_PREFILL_DISCOUNT = 0.25
+#: token: prefill batches prompt tokens through one jitted chunk call
+#: (``models.model.prefill_step``), amortizing the per-step dispatch/sync
+#: overhead the decode path pays every token.  Both the live engine and the
+#: virtual-time simulation charge prompt tokens at this fraction.
+PREFILL_FRACTION = 0.25
 #: fixed per-step dispatch overhead (cycles): queue maintenance + batch
 #: launch, independent of width
 _STEP_OVERHEAD_CYCLES = 16.0
@@ -268,8 +346,8 @@ class StepCostModel:
                 cpt = rec.cycles / rec.n_samples * _SAMPLES_PER_TOKEN
                 ept = rec.energy / rec.n_samples * _SAMPLES_PER_TOKEN
                 return cls(cycles_decode_token=cpt, energy_decode_token=ept,
-                           cycles_prefill_token=cpt * _PREFILL_DISCOUNT,
-                           energy_prefill_token=ept * _PREFILL_DISCOUNT,
+                           cycles_prefill_token=cpt * PREFILL_FRACTION,
+                           energy_prefill_token=ept * PREFILL_FRACTION,
                            source=src)
         return cls(cycles_decode_token=64.0, energy_decode_token=64.0,
                    cycles_prefill_token=16.0, energy_prefill_token=16.0,

@@ -1,9 +1,11 @@
 """Serve-path tests: admission backpressure, continuous vs static (wave)
 slot refill, straggler-aware host dispatch, SLO accounting on the
-virtual-time simulation, and the live engine's continuous-batching
-equivalence (a mid-run admitted request decodes the same tokens as on a
-fresh engine)."""
+virtual-time simulation, the live engine's continuous-batching equivalence
+(a mid-run admitted request decodes the same tokens as on a fresh engine),
+chunked-prefill bit-exactness on mixed-phase batches, and measured-traffic
+operating-point retargeting."""
 import jax
+import jax.numpy as jnp
 import pytest
 
 from repro.config import RunConfig
@@ -12,7 +14,7 @@ from repro.models import init_model_params
 from repro.serve import (AdmissionControl, AdmissionError,
                          ContinuousScheduler, HostDispatch, ServeEngine,
                          ServeSLO, StepCostModel, TraceRequest,
-                         simulate_serve)
+                         TrafficEstimator, simulate_serve)
 
 RC = RunConfig(remat=False, dtype="float32")
 KEY = jax.random.PRNGKey(0)
@@ -252,3 +254,169 @@ def test_engine_static_mode_still_serves_everything():
     done = eng.run()
     assert set(done) == set(rids)
     assert all(len(r.generated) == 3 for r in done.values())
+
+
+@pytest.mark.tier1
+def test_engine_refuses_empty_prompt_before_any_state():
+    """Regression: an empty prompt must be shed at admission, before any
+    engine-side Request state exists — never reach the batch-assembly path
+    (which indexes ``prompt[-1]``)."""
+    cfg = _cfg()
+    eng = ServeEngine({}, cfg, RC, batch_slots=2, max_len=16)
+    with pytest.raises(AdmissionError, match="empty request"):
+        eng.submit([], max_new=4)
+    with pytest.raises(AdmissionError, match="empty request"):
+        eng.submit([1, 2], max_new=0)
+    assert not eng.requests and not eng.sched.requests
+    assert eng.sched.n_rejected == 2
+
+
+# --- live-engine chunked prefill -------------------------------------------
+
+def _slot_rows(cache, i):
+    """Slot ``i``'s rows of every cache leaf (batch is axis 0 of ``len``,
+    axis 1 of stacked leaves)."""
+    return {k: (v if v.ndim == 0 else v[i] if v.ndim == 1 else v[:, i])
+            for k, v in cache.items()}
+
+
+def test_engine_chunked_prefill_mixed_phase_bit_exact():
+    """One slot mid-prefill-chunk while its neighbour decodes: the chunked
+    engine's generated tokens and each request's cache rows *at its
+    completion step* are bit-exact with the token-by-token reference.
+    (Rows are snapshotted at completion: once a slot frees, later steps may
+    overwrite it with junk that the next refill zeroes — comparing
+    end-of-run rows of freed slots would compare that junk.)"""
+    cfg = _cfg()
+    params = init_model_params(KEY, cfg)
+    # rid 0: short prompt, decodes while rid 1 is still chunk-prefilling
+    reqs = [([5, 9], 8), (list(range(1, 19)), 3)]
+
+    def run_with_snapshots(prefill):
+        eng = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64,
+                          prefill=prefill, prefill_chunk=4)
+        rids = [eng.submit(p, max_new=m) for p, m in reqs]
+        snaps, slot_of = {}, {}
+        for _ in range(200):
+            if not eng.sched.busy:
+                break
+            for i, s in enumerate(eng.sched.slots):
+                if s is not None:
+                    slot_of[s.rid] = i
+            eng.step()
+            for rid in eng.finished:
+                if rid not in snaps:
+                    snaps[rid] = _slot_rows(eng.cache, slot_of[rid])
+        assert set(eng.finished) == set(rids)
+        return eng, snaps
+
+    chunked, snaps_c = run_with_snapshots("chunked")
+    token, snaps_t = run_with_snapshots("token")
+    for rid in chunked.finished:
+        assert chunked.finished[rid].generated == \
+            token.finished[rid].generated
+        rows_c, rows_t = snaps_c[rid], snaps_t[rid]
+        assert set(rows_c) == set(rows_t)
+        for k in rows_c:
+            assert bool(jnp.array_equal(rows_c[k], rows_t[k])), \
+                f"rid {rid} cache leaf {k!r} diverged"
+    # the chunked run actually took fewer engine steps (that is the point)
+    assert chunked._n_steps < token._n_steps
+
+
+def test_engine_readmission_during_neighbour_prefill():
+    """A request admitted into a freed slot while its neighbour is still
+    mid-prefill decodes exactly the tokens it would on a fresh engine."""
+    cfg = _cfg()
+    params = init_model_params(KEY, cfg)
+    prompt, max_new = [7, 3, 9, 1], 5
+
+    eng = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64,
+                      prefill_chunk=4)
+    eng.submit([4, 5, 6], max_new=2)          # finishes early, frees slot 0
+    eng.submit(list(range(1, 25)), max_new=4)  # long prefill in slot 1
+    for _ in range(3):
+        eng.step()
+    rid = eng.submit(prompt, max_new=max_new)
+    # the readmission lands while slot 1 is still prefilling
+    assert any(s is not None and s.phase == "prefill"
+               for s in eng.sched.slots)
+    done = eng.run()
+    assert len(done) == 3
+
+    fresh = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64,
+                        prefill_chunk=4)
+    rid_f = fresh.submit(prompt, max_new=max_new)
+    assert done[rid].generated == fresh.run()[rid_f].generated
+
+
+def test_engine_chunk_bucket_jit_cache_is_bounded():
+    """Varied prompt lengths across many requests hit at most
+    log2(prefill_chunk) + 1 chunk buckets — the jit cache never grows past
+    that, however long the engine runs."""
+    cfg = _cfg()
+    params = init_model_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64,
+                      prefill_chunk=8)
+    for plen in (1, 2, 3, 5, 8, 13, 21, 6, 17):
+        eng.submit(list(range(1, plen + 1)), max_new=2)
+    eng.run(max_steps=4000)
+    assert not eng.sched.busy
+    max_compiles = 4                      # log2(8) + 1: widths 1, 2, 4, 8
+    assert 1 <= eng.prefill_compiles <= max_compiles
+    assert set(eng._prefill_jit) <= {1, 2, 4, 8}
+
+
+# --- measured-traffic operating points --------------------------------------
+
+@pytest.mark.tier1
+def test_traffic_estimator_levels():
+    est = TrafficEstimator(capacity_tokens_per_cycle=0.01, min_arrivals=4)
+    assert est.level() is None            # cold: no evidence, no level
+    # a thundering herd (zero gaps) saturates offered load -> "high"
+    for i in range(6):
+        est.observe(now=0.0, prompt_len=8, max_new=8)
+    assert est.offered_load() == 1.0 and est.level() == "high"
+    # sparse arrivals (gap >> work/capacity) decay the estimate -> "low"
+    est2 = TrafficEstimator(capacity_tokens_per_cycle=0.01, min_arrivals=4)
+    for i in range(8):
+        est2.observe(now=i * 1e6, prompt_len=8, max_new=8)
+    assert est2.offered_load() < 0.3 and est2.level() == "low"
+
+
+@pytest.mark.tier1
+def test_scheduler_estimator_observes_shed_arrivals_too():
+    est = TrafficEstimator(capacity_tokens_per_cycle=0.01, min_arrivals=1)
+    sched = ContinuousScheduler(1, admission=AdmissionControl(max_pending=1),
+                                estimator=est)
+    sched.submit(0, prompt_len=2, max_new=4, now=0.0)
+    with pytest.raises(AdmissionError):
+        sched.submit(1, prompt_len=2, max_new=4, now=1.0)
+    assert est.n_arrivals == 2            # rejected arrivals are load too
+
+
+def test_engine_measured_traffic_retargets_at_refill():
+    """With neither an operating point nor a --traffic pin, the engine
+    estimates the level from arrivals and re-resolves the operating point
+    at a refill boundary; retargeting never changes generated tokens."""
+    cfg = _cfg()
+    params = init_model_params(KEY, cfg)
+    eng = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64)
+    assert eng.sched.estimator is not None and eng.traffic_level is None
+    rids = [eng.submit([1 + i, 2, 3], max_new=2) for i in range(5)]
+    done = eng.run()
+    assert set(done) == set(rids)
+    # 5 same-clock arrivals saturate the estimator -> "high" at first refill
+    assert eng.traffic_level == "high"
+    assert eng.traffic_history and \
+        eng.traffic_history[0]["level"] == "high"
+
+    pinned = ServeEngine(params, cfg, RC, batch_slots=2, max_len=64,
+                         traffic="medium")
+    assert pinned.sched.estimator is None        # static override
+    assert pinned.traffic_level == "medium" and not pinned.traffic_history
+    rids_p = [pinned.submit([1 + i, 2, 3], max_new=2) for i in range(5)]
+    done_p = pinned.run()
+    # the operating point only steers accounting, never the tokens
+    for a, b in zip(rids, rids_p):
+        assert done[a].generated == done_p[b].generated

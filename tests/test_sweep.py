@@ -365,10 +365,11 @@ def test_benchmarks_run_smoke():
     assert "cluster_pipeline_cluster_matmul_x4_ipc_ratio" in res.stdout
     assert "front_diff_drift_findings" in res.stdout
     assert "serve_slo_bursty_tput_at_slo_gain" in res.stdout
+    assert "serve_prefill_ttft_wall_gain" in res.stdout
     # per-section pass/fail summary: every section reports, none failed
     assert "# --- summary ---" in res.stdout
     assert "# FAIL" not in res.stdout
-    assert res.stdout.count("# PASS:") == 10
+    assert res.stdout.count("# PASS:") == 11
 
 
 # ---------------------------------------------------------------------------
